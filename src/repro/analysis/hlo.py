@@ -1,0 +1,145 @@
+"""Post-SPMD HLO text walker: collective traffic with loop multipliers.
+
+XLA prints one computation per block; while-ops name their body/condition
+computations and scan-derived conditions compare a counter against a
+constant, so trip counts are recoverable.  We walk from the entry
+computation, multiplying collective byte counts by the product of
+enclosing loop trip counts — this is what `compiled.cost_analysis()`
+doesn't do (it counts loop bodies once).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,?.*?condition=\s*%?([\w.\-]+).*?body=\s*%?([\w.\-]+)",
+    re.DOTALL)
+_CALL_RE = re.compile(
+    r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=\s*%?([\w.\-]+)")
+_CONST_CMP = re.compile(r"compare\(")
+_S32_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_COLLECTIVE_LINE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}\d]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_REPLICA_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def _shape_bytes(s: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPLICA_GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m and m.group(1).strip():
+        return len(m.group(1).split(","))
+    return default
+
+
+def split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo.splitlines():
+        m = _COMP_HEADER.match(line.strip()) if "{" in line and "->" in line else None
+        if m and not line.lstrip().startswith(("ROOT", "//")):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def trip_count(cond_lines: list[str]) -> float:
+    """Heuristic: scan-derived conditions compare a counter to an s32
+    constant (possibly behind a wrapped-compare fusion)."""
+    consts = []
+    for l in cond_lines:
+        consts += [int(x) for x in _S32_CONST.findall(l)]
+    return float(max(consts)) if consts else 1.0
+
+
+@dataclass
+class CollectiveTraffic:
+    wire_bytes: dict[str, float] = field(default_factory=dict)
+    counts: dict[str, float] = field(default_factory=dict)
+
+    def add(self, kind: str, b: float, mult: float):
+        self.wire_bytes[kind] = self.wire_bytes.get(kind, 0.0) + b * mult
+        self.counts[kind] = self.counts.get(kind, 0.0) + mult
+
+    def total(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def collect(hlo: str, n_devices: int) -> CollectiveTraffic:
+    comps = split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fall back: computation named main*
+        entry = next((c for c in comps if c.startswith("main")), None)
+    out = CollectiveTraffic()
+    seen: set[tuple[str, float]] = set()
+
+    def walk(comp: str, mult: float, depth=0):
+        if comp not in comps or depth > 50 or (comp, mult) in seen:
+            return
+        seen.add((comp, mult))
+        for line in comps[comp]:
+            cm = _COLLECTIVE_LINE.search(line)
+            if cm:
+                kind = cm.group(2)
+                g = _group_size(line, n_devices)
+                if g > 1:
+                    shard = _shape_bytes(cm.group(1))
+                    if kind == "all-reduce":
+                        per_dev = 2 * (g - 1) / g * shard
+                    elif kind == "all-gather":
+                        per_dev = (g - 1) / g * shard
+                    elif kind == "reduce-scatter":
+                        per_dev = (g - 1) * shard
+                    elif kind == "all-to-all":
+                        per_dev = (g - 1) / g * shard
+                    else:
+                        per_dev = shard
+                    out.add(kind, per_dev * n_devices, mult)
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                walk(body, mult * trip_count(comps.get(cond, [])), depth + 1)
+                continue
+            fm = _CALL_RE.search(line)
+            if fm:
+                walk(fm.group(1), mult, depth + 1)
+
+    if entry:
+        walk(entry, 1.0)
+    return out

@@ -1,0 +1,111 @@
+"""Exact global FLOP/byte counting by jaxpr traversal.
+
+XLA's cost analysis counts while-loop bodies once and reports per-device
+numbers on the CPU backend; for the roofline we need whole-step, whole-
+slice counts.  Jaxprs carry static scan lengths, so traversal is exact:
+scan bodies multiply by trip count, remat/pjit/custom_* recurse.
+
+flops:       2*M*N*K per dot_general (batch dims included), conv ignored
+             (none in these models).
+major_bytes: operand+result bytes of dot_general / gather / scatter /
+             dynamic-slice/update ops — the HBM-traffic-dominant ops
+             (weights, caches, activations at matmul boundaries).  An
+             fusion-unaware upper bound for elementwise chains is NOT
+             included; see EXPERIMENTS.md §Roofline method note.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import reduce
+
+import jax
+import numpy as np
+
+
+def _nbytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=float)) * aval.dtype.itemsize
+    except Exception:
+        return 0.0
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    batch = reduce(lambda a, b: a * b, (lhs.shape[i] for i in lb), 1)
+    contract = reduce(lambda a, b: a * b, (lhs.shape[i] for i in lc), 1)
+    lfree = reduce(lambda a, b: a * b,
+                   (d for i, d in enumerate(lhs.shape) if i not in lc + lb), 1)
+    rfree = reduce(lambda a, b: a * b,
+                   (d for i, d in enumerate(rhs.shape) if i not in rc + rb), 1)
+    return 2.0 * batch * contract * lfree * rfree
+
+
+_MAJOR = {"dot_general", "gather", "scatter", "scatter-add", "dynamic_slice",
+          "dynamic_update_slice", "conv_general_dilated", "take"}
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    major_bytes: float = 0.0
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.major_bytes + o.major_bytes)
+
+    def __mul__(self, k: float):
+        return Cost(self.flops * k, self.major_bytes * k)
+
+
+def _sub_jaxprs(eqn):
+    """(jaxpr, multiplier) pairs for an eqn's sub-computations."""
+    prim = eqn.primitive.name
+    p = eqn.params
+    if prim == "scan":
+        return [(p["jaxpr"].jaxpr, float(p["length"]))]
+    if prim == "while":
+        # assume the common fori pattern; trip count unknown -> 1 (flagged)
+        return [(p["body_jaxpr"].jaxpr, 1.0)]
+    if prim == "cond":
+        return [(b.jaxpr, 1.0 / max(1, len(p["branches"])))
+                for b in p["branches"]]
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p:
+            j = p[key]
+            return [(getattr(j, "jaxpr", j), 1.0)]
+    out = []
+    for k, v in p.items():
+        for x in (v if isinstance(v, (list, tuple)) else (v,)):
+            if hasattr(x, "jaxpr") and hasattr(getattr(x, "jaxpr"), "eqns"):
+                out.append((x.jaxpr, 1.0))
+            elif hasattr(x, "eqns"):
+                out.append((x, 1.0))
+    return out
+
+
+def _count(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for sub, mult in subs:
+                total = total + _count(sub) * mult
+            continue
+        if prim == "dot_general":
+            c = Cost(_dot_flops(eqn),
+                     sum(_nbytes(v.aval) for v in eqn.invars)
+                     + sum(_nbytes(v.aval) for v in eqn.outvars))
+            total = total + c
+        elif prim in _MAJOR:
+            total = total + Cost(0.0,
+                                 sum(_nbytes(v.aval) for v in eqn.invars
+                                     if hasattr(v, "aval"))
+                                 + sum(_nbytes(v.aval) for v in eqn.outvars))
+    return total
+
+
+def count_step(fn, *arg_specs) -> Cost:
+    """Trace fn abstractly and count global FLOPs / major bytes."""
+    closed = jax.make_jaxpr(fn)(*arg_specs)
+    return _count(closed.jaxpr)

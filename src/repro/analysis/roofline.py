@@ -1,0 +1,189 @@
+"""Roofline analysis from compiled AOT artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs  / (chips * peak_FLOP/s)
+    memory     = HLO_bytes  / (chips * HBM_bw)
+    collective = wire_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-module,
+i.e. already summed over partitions).  wire_bytes is parsed from the
+post-SPMD-partitioning HLO text: per collective op we charge the ring cost
+(all-reduce 2(n-1)/n, all-gather/reduce-scatter (n-1)/n, all-to-all
+(n-1)/n, collective-permute 1x) on the shard bytes, times the number of
+participating devices (total traffic), divided by chips*link_bw.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float       # per chip, bf16
+    hbm_bw: float           # bytes/s per chip
+    link_bw: float          # bytes/s per ICI link
+    hbm_bytes: float        # capacity per chip
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                  link_bw=50e9, hbm_bytes=16e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 0.5, "u4": 0.5, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"all-reduce-start|all-gather-start|reduce-scatter-start|"
+    r"collective-permute-start)\b(.*)$")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_REPLICA_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPLICA_GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [ngroups,group_size]<=iota
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([x for x in first.split(",") if x.strip() != ""])
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    op_bytes: dict[str, float] = field(default_factory=dict)   # shard bytes by kind
+    wire_bytes: dict[str, float] = field(default_factory=dict)  # ring-cost traffic
+    counts: dict[str, int] = field(default_factory=dict)
+
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Sum collective traffic over the partitioned module (per step)."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
+        kind = kind.replace("-start", "")
+        g = _group_size(rest, n_devices)
+        if g <= 1:
+            continue
+        shard_bytes = _shape_bytes(shape_str)  # result shape (per device)
+        if kind == "all-reduce":
+            # in == out shape; ring moves 2(n-1)/n of the buffer, per device
+            per_dev = 2 * (g - 1) / g * shard_bytes
+        elif kind == "all-gather":
+            # result is the gathered buffer; each device receives (n-1)/n of it
+            per_dev = (g - 1) / g * shard_bytes
+        elif kind == "reduce-scatter":
+            # result is the scattered shard; each device sends (n-1) shards
+            per_dev = (g - 1) * shard_bytes
+        elif kind == "all-to-all":
+            per_dev = (g - 1) / g * shard_bytes
+        else:  # collective-permute
+            per_dev = shard_bytes
+        total = per_dev * n_devices  # total wire traffic across the slice
+        st.op_bytes[kind] = st.op_bytes.get(kind, 0.0) + shard_bytes * n_devices
+        st.wire_bytes[kind] = st.wire_bytes.get(kind, 0.0) + total
+        st.counts[kind] = st.counts.get(kind, 0) + 1
+    return st
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float
+    hlo_bytes: float
+    wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float
+    collectives: dict
+    per_device_peak_memory: float | None = None
+    step_time_bound_s: float = 0.0
+    tokens_per_s: float = 0.0
+    mfu: float = 0.0
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze_compiled(compiled, *, arch: str, shape_name: str, mesh_name: str,
+                     n_devices: int, model_flops: float, tokens: float,
+                     step_flops: float, step_bytes: float,
+                     hw: Hardware = HW_V5E, hlo_text: str | None = None) -> RooflineReport:
+    """step_flops / step_bytes: exact whole-step global counts from
+    `repro.analysis.jaxpr_cost.count_step` (XLA's own cost analysis counts
+    loop bodies once and is per-device on CPU — see EXPERIMENTS.md).
+
+    Collective traffic is walked from the post-SPMD HLO with while-loop
+    trip multipliers (`repro.analysis.hlo.collect`)."""
+    from . import hlo as hlo_mod
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = hlo_mod.collect(text, n_devices)
+
+    compute_s = step_flops / (n_devices * hw.peak_flops)
+    memory_s = step_bytes / (n_devices * hw.hbm_bw)
+    collective_s = coll.total() / (n_devices * hw.link_bw)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = (float(getattr(ma, "temp_size_in_bytes", 0))
+               + float(getattr(ma, "argument_size_in_bytes", 0)))
+    except Exception:
+        pass
+
+    bound = max(terms.values())
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=step_flops, hlo_bytes=step_bytes, wire_bytes=coll.total(),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_flops_ratio=(model_flops / step_flops) if step_flops else 0.0,
+        collectives={"counts": coll.counts, "wire_bytes": coll.wire_bytes},
+        per_device_peak_memory=mem,  # the compiled module is per-device
+        step_time_bound_s=bound,
+        tokens_per_s=(tokens / bound) if bound else 0.0,
+        mfu=(model_flops / (n_devices * hw.peak_flops)) / bound if bound else 0.0,
+    )

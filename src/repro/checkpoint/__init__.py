@@ -1,0 +1,5 @@
+from .sharded import (AsyncCheckpointer, latest_step, list_steps,
+                      restore_checkpoint, save_checkpoint)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "list_steps",
+           "restore_checkpoint", "save_checkpoint"]

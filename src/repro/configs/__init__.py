@@ -1,0 +1,33 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+from .base import SHAPES, ModelConfig, ShapeCfg, cell_is_runnable  # noqa: F401
+
+from . import (deepseek_coder_33b, h2o_danube3_4b, internvl2_26b,  # noqa: E402
+               jamba_1_5_large, llama4_maverick, llama4_scout, mamba2_370m,
+               nemotron4_15b, qwen2_5_3b, seamless_m4t_medium, tiny)
+
+_REGISTRY: dict[str, ModelConfig] = {}
+for _m in (mamba2_370m, h2o_danube3_4b, deepseek_coder_33b, nemotron4_15b,
+           qwen2_5_3b, jamba_1_5_large, llama4_maverick, llama4_scout,
+           internvl2_26b, seamless_m4t_medium, tiny):
+    _REGISTRY[_m.CONFIG.name] = _m.CONFIG
+
+ARCHS = tuple(n for n in _REGISTRY if not n.startswith("tiny"))
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return _REGISTRY[name[:-6]].reduced()
+    return _REGISTRY[name]
+
+
+def all_cells():
+    """All (arch, shape) dry-run cells with runnability flags."""
+    out = []
+    for a in ARCHS:
+        cfg = _REGISTRY[a]
+        for s in SHAPES.values():
+            ok, why = cell_is_runnable(cfg, s)
+            out.append((a, s.name, ok, why))
+    return out

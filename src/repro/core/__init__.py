@@ -1,0 +1,4 @@
+"""Core of the paper's contribution: automated space/time scaling of STGs."""
+from . import fork_join, heuristic, ilp, intra_node, simulate, throughput, transform  # noqa: F401
+from .fork_join import JPEG_CALIBRATED, LITERAL, ForkJoinModel  # noqa: F401
+from .stg import STG, Channel, Impl, Node, Selection  # noqa: F401

@@ -1,0 +1,1 @@
+from . import jpeg, nbody, streamit  # noqa: F401

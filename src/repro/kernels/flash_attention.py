@@ -1,0 +1,136 @@
+"""Flash attention Pallas TPU kernel (GQA + causal + sliding window).
+
+TPU adaptation notes (vs. the CUDA flash-attention blocking):
+  * Tiles live in VMEM; block shapes are (block_q, head_dim) / (block_k,
+    head_dim) with head_dim padded to the 128-lane MXU width by the caller.
+  * The KV axis is the innermost *sequential* grid dimension; the online
+    softmax accumulators (acc, m, l) persist in VMEM scratch across those
+    iterations (TPU grids execute in order — the idiomatic replacement for
+    the CUDA intra-CTA loop).
+  * Fully-masked KV blocks are skipped with pl.when rather than warp-level
+    early exit.
+
+Layouts: q (B, H, Sq, D); k, v (B, KV, Sk, D); out (B, H, Sq, D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  kv_offset: int, block_q: int, block_k: int,
+                  num_k_blocks: int, sq: int, sk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q + kv_offset   # absolute position of this q block
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < sk
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    if causal or window is not None:
+        # Skip blocks that are entirely masked (block-level sparsity).
+        lo = q_start - (window - 1) if window is not None else -1
+        alive = (k_start <= q_start + block_q - 1)
+        alive &= (k_start + block_k - 1 >= lo) if window is not None else True
+        pl.when(alive)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "kv_offset", "block_q",
+                     "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, kv_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0
+    rep = h // kv
+    scale = scale if scale is not None else d ** -0.5
+
+    qt = q.transpose(0, 2, 1, 3)       # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)       # (B, KV, Sk, D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = -(-sq // block_q)
+    nk = -(-sk // block_k)
+    pad_q = nq * block_q - sq
+    pad_k = nk * block_k - sk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        kv_offset=kv_offset, block_q=block_q, block_k=block_k,
+        num_k_blocks=nk, sq=sq, sk=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j, rep=rep: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nq * block_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # running max m
+            pltpu.VMEM((block_q,), jnp.float32),     # running sum l
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :sq]
+    return out.transpose(0, 2, 1, 3)

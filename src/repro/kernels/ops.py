@@ -1,0 +1,60 @@
+"""Kernel dispatch: pallas (TPU) / interpret (tests) / ref (CPU dry-run).
+
+Model code calls these wrappers; the active implementation is selected by
+``set_default_impl`` or per-call.  On the CPU dry-run the ``ref`` paths are
+used — `ref.mha_chunked` / `ref.ssd_chunked` share the kernels' blocking
+structure so the lowered HLO shows the same memory behaviour.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .rmsnorm import rmsnorm as _rmsnorm_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+_DEFAULT_IMPL: str | None = None  # None => auto
+
+
+def set_default_impl(impl: str | None) -> None:
+    """impl in {None, 'pallas', 'interpret', 'ref'}."""
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+def resolve_impl(impl: str | None = None) -> str:
+    impl = impl or _DEFAULT_IMPL
+    if impl in ("pallas", "interpret", "ref"):
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None, kv_offset: int = 0,
+              impl: str | None = None, block_q: int = 128, block_k: int = 128):
+    """Multi-head (GQA) attention. q: (B,Sq,H,D), k/v: (B,Sk,KV,D)."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return ref.mha_chunked(q, k, v, causal=causal, window=window,
+                               scale=scale, kv_offset=kv_offset,
+                               block_k=block_k)
+    return _flash_pallas(q, k, v, causal=causal, window=window, scale=scale,
+                         kv_offset=kv_offset, block_q=block_q, block_k=block_k,
+                         interpret=(mode == "interpret"))
+
+
+def ssd(x, dt, a, b, c, *, chunk: int = 128, impl: str | None = None):
+    """Mamba2 SSD scan. Returns (y, final_state)."""
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return ref.ssd_chunked(x, dt, a, b, c, chunk=chunk)
+    return _ssd_pallas(x, dt, a, b, c, chunk=chunk,
+                       interpret=(mode == "interpret"))
+
+
+def rmsnorm(x, w, *, eps: float = 1e-5, impl: str | None = None):
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return ref.rmsnorm_reference(x, w, eps=eps)
+    return _rmsnorm_pallas(x, w, eps=eps, interpret=(mode == "interpret"))

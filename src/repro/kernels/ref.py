@@ -1,0 +1,249 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Three tiers per op:
+  * ``*_reference`` — the simplest correct definition (the gold oracle used
+    by kernel tests; materialises O(S^2) for attention, sequential scan for
+    SSD).
+  * ``*_chunked``  — memory-safe jnp implementation with the same blocking
+    structure as the TPU kernel (online softmax / chunked state passing).
+    This is what the models use on backends without Pallas (e.g. the CPU
+    dry-run); its HLO exhibits the fused kernels' memory behaviour.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def mha_reference(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None, kv_offset: int = 0):
+    """Multi-head attention oracle.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H a multiple of KV (GQA).
+    ``kv_offset``: absolute position of q[0] minus k[0] (decode: Sk-Sq).
+    ``window``: sliding-window width (attend to the last `window` keys).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    rep = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + kv_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mha_chunked(q, k, v, *, causal: bool = True, window: int | None = None,
+                scale: float | None = None, kv_offset: int = 0,
+                block_q: int = 512, block_k: int = 1024):
+    """Flash-style online-softmax attention with q- and kv-blocking:
+    an outer lax.map over q blocks and an inner lax.scan over KV blocks —
+    O(block_q * block_k) live logits instead of O(Sq * Sk)."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    rep = h // kv
+    scale = scale if scale is not None else d ** -0.5
+
+    block_k = min(block_k, sk)
+    nkb = -(-sk // block_k)
+    pad_k = nkb * block_k - sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kb = k.reshape(b, nkb, block_k, kv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nkb, block_k, kv, d).transpose(1, 0, 2, 3, 4)
+    kstarts = jnp.arange(nkb) * block_k
+
+    block_q = min(block_q, sq)
+    nqb = -(-sq // block_q)
+    pad_q = nqb * block_q - sq
+    qf = q.astype(jnp.float32) * scale
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qb = qf.reshape(b, nqb, block_q, h, d).transpose(1, 0, 2, 3, 4)
+    qstarts = jnp.arange(nqb) * block_q
+
+    @jax.checkpoint  # flash-style: recompute block logits/masks in the bwd
+    def q_block(args):
+        qblk, q_start = args                     # (b, bq, h, d), ()
+        qpos = q_start + jnp.arange(block_q) + kv_offset
+
+        def step(carry, blk):
+            acc, m, l = carry
+            kblk, vblk, k_start = blk
+            kblk = jnp.repeat(kblk.astype(jnp.float32), rep, axis=2)
+            vblk = jnp.repeat(vblk.astype(jnp.float32), rep, axis=2)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk)
+            kpos = k_start + jnp.arange(block_k)
+            mask = kpos[None, :] < sk
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vblk)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, block_q, d), jnp.float32)
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kb, vb, kstarts))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    outs = jax.lax.map(q_block, (qb, qstarts))    # (nqb, b, h, bq, d)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nqb * block_q, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *,
+                         window: int | None = None, scale: float | None = None):
+    """Single-token decode attention over a (possibly ring-buffered) cache.
+
+    q: (B, H, D); caches: (B, C, KV, D); cache_len: () int32 — number of
+    valid entries.  For ring buffers, callers pass position-consistent
+    masks via cache_len == capacity once wrapped.
+    """
+    b, h, d = q.shape
+    _, c, kv, _ = k_cache.shape
+    rep = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    kf = jnp.repeat(k_cache.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), rep, axis=2)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32) * scale, kf)
+    idx = jnp.arange(c)
+    mask = idx[None, :] < cache_len
+    if window is not None:
+        mask &= idx[None, :] >= cache_len - window
+    logits = jnp.where(mask[:, None] if mask.ndim == 2 else mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) — arXiv:2405.21060
+# --------------------------------------------------------------------------
+def ssd_reference(x, dt, a, b, c, *, d_skip=None, init_state=None):
+    """Sequential (token-by-token) SSD recurrence — the gold oracle.
+
+    x:  (B, L, H, P)   inputs (post-conv, post-activation)
+    dt: (B, L, H)      softplus-ed timestep
+    a:  (H,)           negative decay rate (A = -exp(a_log))
+    b:  (B, L, N)      input projection (n_groups=1, broadcast over heads)
+    c:  (B, L, N)      output projection
+    d_skip: (H,) optional skip connection weight
+    Returns y: (B, L, H, P), final_state: (B, H, P, N)
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    s0 = init_state if init_state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(s, t):
+        xt, dtt, bt, ct = t
+        decay = jnp.exp(dtt * a)[:, :, None, None]          # (B,H,1,1)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)     # discretised input
+        s = s * decay + dbx
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3), dt.astype(jnp.float32).transpose(1, 0, 2),
+          b.astype(jnp.float32).transpose(1, 0, 2), c.astype(jnp.float32).transpose(1, 0, 2))
+    s, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    if d_skip is not None:
+        y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), s
+
+
+def ssd_chunked(x, dt, a, b, c, *, chunk: int = 128, d_skip=None, init_state=None):
+    """Chunked SSD (the TPU kernel's algorithm, in jnp).
+
+    Within a chunk: quadratic "attention-like" form with decay mask;
+    across chunks: state carried by a lax.scan.  O(L*chunk) memory.
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    nc = -(-L // chunk)
+    pad = nc * chunk - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+    bf = b.astype(jnp.float32).reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    cf = c.astype(jnp.float32).reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    s0 = init_state if init_state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+
+    def chunk_step(s, t):
+        xc, dtc, bc, cc = t                      # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N)
+        la = dtc * a                             # log-decay per step (B,Q,H)
+        cs = jnp.cumsum(la, axis=1)              # inclusive cumsum (B,Q,H)
+        # intra-chunk: y_i += sum_{j<=i} C_i.B_j * exp(cs_i - cs_j) * dt_j * x_j
+        seg = cs[:, :, None, :] - cs[:, None, :, :]            # (B,Qi,Qj,H)
+        i = jnp.arange(xc.shape[1])
+        causal = (i[:, None] >= i[None, :])[None, :, :, None]
+        decay = jnp.where(causal, jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)                # (B,Qi,Qj)
+        w = cb[..., None] * decay * dtc[:, None, :, :]         # (B,Qi,Qj,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xc)
+        # inter-chunk: y_i += C_i . (exp(cs_i) * S_prev)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cc, s, jnp.exp(cs))
+        # state update: S = exp(sum la) * S + sum_j exp(cs_last - cs_j) dt_j B_j x_j
+        tot = cs[:, -1, :]                                     # (B,H)
+        rem = jnp.exp(tot[:, None, :] - cs)                    # (B,Q,H)
+        dbx = jnp.einsum("bjh,bjn,bjhp->bhpn", rem * dtc, bc, xc)
+        s_new = s * jnp.exp(tot)[:, :, None, None] + dbx
+        return s_new, y_intra + y_inter
+
+    s, ys = jax.lax.scan(chunk_step, s0, (xf, dtf, bf, cf))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, H, P)[:, :L]
+    if d_skip is not None:
+        y = y + x.astype(jnp.float32)[:, :L] * d_skip[None, None, :, None]
+    return y.astype(x.dtype), s
+
+
+def ssd_decode_step(s, xt, dtt, a, bt, ct, *, d_skip=None):
+    """One-token SSD state update (serving): s (B,H,P,N) -> (y, s')."""
+    decay = jnp.exp(dtt.astype(jnp.float32) * a)[:, :, None, None]
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(jnp.float32),
+                     bt.astype(jnp.float32), xt.astype(jnp.float32))
+    s = s * decay + dbx
+    y = jnp.einsum("bhpn,bn->bhp", s, ct.astype(jnp.float32))
+    if d_skip is not None:
+        y = y + xt.astype(jnp.float32) * d_skip[None, :, None]
+    return y.astype(xt.dtype), s
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def rmsnorm_reference(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * w.astype(jnp.float32)).astype(x.dtype)

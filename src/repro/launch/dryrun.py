@@ -1,0 +1,211 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines (before any other import, including
+repro.*): jax locks the device count on first init."""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse       # noqa: E402
+import json           # noqa: E402
+import time           # noqa: E402
+import traceback      # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis.jaxpr_cost import count_step  # noqa: E402
+from repro.analysis.roofline import HW_V5E, analyze_compiled  # noqa: E402
+from repro.configs import SHAPES, get_config, all_cells  # noqa: E402
+from repro.launch import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_device_count  # noqa: E402
+from repro.launch.steps import input_specs  # noqa: E402
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _shardings_for(bundle, mesh, cfg, policy):
+    """NamedSharding tree matching the bundle's argument specs."""
+    args = bundle.arg_specs
+    if bundle.kind == "train":
+        params, opt_state, step, batch = args
+        return (shd.tree_shardings(params, mesh, cfg, policy),
+                shd.tree_shardings(opt_state, mesh, cfg, policy),
+                NamedSharding(mesh, P()),
+                shd.named(mesh, shd.batch_specs(mesh, batch, accum=True)))
+    if bundle.kind == "prefill":
+        params, batch = args
+        return (shd.tree_shardings(params, mesh, cfg, policy),
+                shd.named(mesh, shd.batch_specs(mesh, batch)))
+    params, cache, tokens = args
+    return (shd.tree_shardings(params, mesh, cfg, policy),
+            shd.named(mesh, shd.cache_specs(mesh, cache, cfg, policy)),
+            shd.named(mesh, shd.batch_specs(mesh, tokens)))
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True, policy: shd.ShardingPolicy | None = None,
+             verbose: bool = True, tp: int | None = None, sp: bool = False,
+             accum: int | None = None, fsdp: bool | None = None,
+             param_dtype: str | None = None, ep_axis: str = "model",
+             moe_impl: str = "einsum", rep: int | None = None,
+             variant: str = "") -> dict:
+    """Lower+compile one cell.
+
+    Variant knobs (the §Perf hillclimb levers; defaults = baseline policy):
+      tp      — model-axis width; mesh reshapes to (256//tp, tp)
+      sp      — Megatron-style sequence parallelism on the residual stream
+      accum   — gradient-accumulation override (microbatch size lever)
+      fsdp    — force FSDP on/off
+      variant — artifact-name suffix so baselines are never overwritten
+    """
+    import dataclasses
+
+    from repro.models import blocks as _blocks
+    _blocks.set_moe_impl(moe_impl)
+    cfg = get_config(arch)
+    if accum is not None:
+        cfg = dataclasses.replace(cfg, grad_accum=accum)
+    if param_dtype is not None:
+        cfg = dataclasses.replace(cfg, param_dtype=param_dtype)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod, tp=tp, rep=rep)
+    if rep:
+        mesh_name = "x".join(str(x) for x in mesh.devices.shape)
+    else:
+        mesh_name = ("2x16x16" if multi_pod else "16x16") if tp in (None, 16)             else ("2x%dx%d" % (256 // tp, tp) if multi_pod
+              else "%dx%d" % (256 // tp, tp))
+    n_dev = mesh_device_count(mesh)
+    if policy is None:
+        policy = shd.ShardingPolicy(
+            fsdp=(shape.kind == "train") if fsdp is None else fsdp,
+            seq_shard_cache=(shape.name == "long_500k"),
+            ep_axis=ep_axis)
+
+    t0 = time.time()
+    grad_sh = None
+    if shape.kind == "train":
+        from repro.launch.steps import abstract_params
+        from repro.models import build_model
+        params_struct = abstract_params(build_model(cfg))
+        grad_sh = shd.tree_shardings(params_struct, mesh, cfg, policy)
+    bundle = input_specs(cfg, shape, grad_shardings=grad_sh)
+    in_sh = _shardings_for(bundle, mesh, cfg, policy)
+    # outputs mirror the param/opt/cache input shardings (metrics replicated)
+    if bundle.kind == "train":
+        out_sh = (in_sh[0], in_sh[1],
+                  {"loss": NamedSharding(mesh, P()), "step": NamedSharding(mesh, P())})
+    elif bundle.kind == "decode":
+        out_sh = (NamedSharding(mesh, P()), in_sh[1])
+    else:
+        out_sh = None  # prefill: let GSPMD place logits + fresh cache
+    from repro import sharding_ctx as sctx
+    with mesh, sctx.activate(sctx.from_mesh(mesh, sp=sp,
+                                            ep_data=policy.ep_axis == "data")):
+        jitted = jax.jit(bundle.fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*bundle.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    cost = count_step(bundle.fn, *bundle.arg_specs)
+
+    mem = compiled.memory_analysis()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    # MODEL_FLOPS: 6*N*D train, 2*N*D inference (fwd only)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    hlo_text = compiled.as_text()
+    rep = analyze_compiled(
+        compiled, arch=arch, shape_name=shape_name, mesh_name=mesh_name,
+        n_devices=n_dev, model_flops=model_flops, tokens=tokens,
+        step_flops=cost.flops, step_bytes=cost.major_bytes,
+        hlo_text=hlo_text)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant or "baseline",
+        "knobs": {"tp": tp or 16, "sp": sp, "accum": cfg.grad_accum,
+                  "fsdp": policy.fsdp, "ep_axis": policy.ep_axis,
+                  "moe_impl": moe_impl},
+        "kind": bundle.kind, "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "roofline": json.loads(rep.to_json()),
+        "policy": {"fsdp": policy.fsdp, "tp": policy.tp,
+                   "seq_shard_cache": policy.seq_shard_cache},
+    }
+    if verbose:
+        arg_gb = (result["memory"]["argument_size"] or 0) / 1e9
+        tmp_gb = (result["memory"]["temp_size"] or 0) / 1e9
+        print(f"[OK] {arch} x {shape_name} x {mesh_name}: "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+              f"args {arg_gb:.1f}GB temp {tmp_gb:.1f}GB (whole slice) | "
+              f"flops {rep.hlo_flops:.3g} wire {rep.wire_bytes:.3g}B | "
+              f"bottleneck={rep.bottleneck} "
+              f"terms(c/m/n)={rep.compute_s:.3f}/{rep.memory_s:.3f}/"
+              f"{rep.collective_s:.3f}s")
+        print(compiled.memory_analysis())
+    if save:
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{variant}" if variant else ""
+        out = ART_DIR / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--tp", type=int, default=None)
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--fsdp", default=None,
+                    choices=[None, "on", "off"])
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--ep-axis", default="model", choices=["model", "data"])
+    ap.add_argument("--moe-impl", default="einsum",
+                    choices=["einsum", "sorted"])
+    ap.add_argument("--rep", type=int, default=None)
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args()
+
+    cells = [(a, s, ok, why) for (a, s, ok, why) in all_cells()
+             if (args.arch is None or a == args.arch)
+             and (args.shape is None or s == args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape_name, ok, why in cells:
+        if not ok:
+            print(f"[SKIP] {arch} x {shape_name}: {why}")
+            continue
+        for mp in meshes:
+            try:
+                run_cell(arch, shape_name, multi_pod=mp, save=not args.no_save,
+                         tp=args.tp, sp=args.sp, accum=args.accum,
+                         fsdp=None if args.fsdp is None else args.fsdp == "on",
+                         param_dtype=args.param_dtype, ep_axis=args.ep_axis,
+                         moe_impl=args.moe_impl, rep=args.rep,
+                         variant=args.variant)
+            except Exception as e:  # a failing cell is a bug in the system
+                failures.append((arch, shape_name, mp, repr(e)))
+                print(f"[FAIL] {arch} x {shape_name} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+    print("all dry-run cells compiled")
+
+
+if __name__ == "__main__":
+    main()

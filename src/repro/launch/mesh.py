@@ -1,0 +1,51 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (required: smoke tests see 1 device; only
+dryrun.py forces 512 host devices)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, tp: int | None = None,
+                         rep: int | None = None):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
+
+    Axes: "data" carries batch (and FSDP param sharding), "model" carries
+    tensor/expert parallelism, "pod" is the slow inter-pod (DCN) data axis.
+
+    ``tp`` reshapes the pod's 256 chips to (256//tp, tp) — the planner's
+    space/time knob (§Perf variants).  The canonical dry-run mesh is the
+    default tp=16."""
+    tp = 16 if tp is None else int(tp)
+    assert 256 % tp == 0 and tp >= 1, f"bad tp={tp}"
+    if rep:
+        # three-axis pod: "data" keeps expert parallelism at width
+        # 256//(tp*rep); "rep" is extra pure-DP; "model" is within-expert TP
+        assert 256 % (tp * rep) == 0
+        shape = (256 // (tp * rep), rep, tp)
+        axes = ("data", "rep", "model")
+        if multi_pod:
+            shape = (2, *shape)
+            axes = ("pod", *axes)
+        return jax.make_mesh(shape, axes)
+    shape = (2, 256 // tp, tp) if multi_pod else (256 // tp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes over which the batch is sharded (everything but "model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def mesh_device_count(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,49 @@
+"""Serving launcher (CLI): batched prefill+decode on local devices.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
+        --requests 16 --max-new 24
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from ..configs import get_config
+from ..runtime.server import LMServer, Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(2, cfg.vocab,
+                                        rng.integers(4, args.prompt_len + 1))
+                    .tolist(),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    srv = LMServer(cfg, max_batch=args.max_batch, seed=args.seed,
+                   temperature=args.temperature)
+    outs = srv.serve(reqs)
+    for c in outs[:4]:
+        print(f"req {c.uid}: prompt {c.prompt_len} tok -> "
+              f"{len(c.tokens)} new tok   {c.tokens[:10]}...")
+    print(json.dumps(srv.stats.summary(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Name-based rules over parameter paths (t5x-style).  Policy:
+  * TP over "model": attention head projections, MLP hidden, experts (EP),
+    vocab (embedding rows / head columns), mamba inner dim.
+  * FSDP over "data" (+"pod"): the non-TP matrix dim of every large weight,
+    applied only when divisible (vocab is pre-padded so it always is).
+  * Everything 1-D (norms, biases vectors) replicated.
+Optimizer state inherits its parameter's spec (fp32 moments are ZeRO-
+sharded by construction).  The planner (repro.core.planner) selects the
+policy knobs; this module just realises them.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .mesh import data_axes
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True            # shard params/opt-state over the data axes
+    tp: bool = True              # tensor/expert parallelism over "model"
+    seq_shard_cache: bool = False  # long-context: shard cache seq over data
+    ep_axis: str = "model"       # "model": experts on the model axis (+FSDP
+                                 # over data)  |  "data": experts on the data
+                                 # axis + within-expert TP over model (a2a
+                                 # dispatch; expert weights never gathered)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _divisible(dim: int, mesh, axes) -> bool:
+    if not axes:
+        return True
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def param_spec(path: str, shape, mesh, cfg: ModelConfig,
+               policy: ShardingPolicy) -> P:
+    """PartitionSpec for one parameter leaf."""
+    ndim = len(shape)
+    dp = data_axes(mesh)
+    fs = dp if policy.fsdp else None
+    tp = "model" if policy.tp else None
+    stacked = bool(re.search(r"(^|/)(layers|enc_layers)/", path))
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    def spec(*axes):
+        """Drop axes that don't divide; pad rank with None."""
+        out = list(lead)
+        for dim, ax in zip(body, axes):
+            if ax is None:
+                out.append(None)
+            elif _divisible(dim, mesh, ax):
+                out.append(ax)
+            else:
+                out.append(None)
+        while len(out) < ndim:
+            out.append(None)
+        return P(*out)
+
+    name = path.rsplit("/", 1)[-1]
+
+    if name == "embed":
+        return spec(tp, fs)                      # (V, D): vocab TP, d FSDP
+    if name == "head":
+        return spec(fs, tp)                      # (D, V)
+    if "experts" in path and name in ("w_gate", "w_up"):
+        if policy.ep_axis == "data":
+            return spec(("data",), None, tp)     # (E, D, F): EP over "data",
+        return spec(tp, fs, None)                # expert-TP over "model"
+    if "experts" in path and name == "w_down":
+        if policy.ep_axis == "data":
+            return spec(("data",), tp, None)     # (E, F, D)
+        return spec(tp, None, fs)
+    if name in ("w_gate", "w_up", "wq", "wk", "wv", "w_xz"):
+        return spec(fs, tp)                      # (D, out): column-parallel
+    if name in ("w_down", "wo", "w_out"):
+        return spec(tp, fs)                      # (in, D): row-parallel
+    if name == "w_bcdt":
+        return spec(fs, None)                    # small projections
+    if name == "router":
+        return spec(None, None)
+    if name == "conv_w":
+        return spec(None, tp)                    # (d_conv, d_inner)
+    if name in ("bq", "bk", "bv"):
+        return spec(tp)
+    if name == "gate_norm":
+        return spec(tp)                          # (d_inner,)
+    return spec(*([None] * len(body)))           # norms, scalars: replicate
+
+
+def tree_pspecs(tree, mesh, cfg: ModelConfig, policy: ShardingPolicy):
+    """Spec tree for a params-like pytree (from jax.eval_shape)."""
+    def leaf_spec(path, leaf):
+        return param_spec(_path_str(path), leaf.shape, mesh, cfg, policy)
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def tree_shardings(tree, mesh, cfg: ModelConfig, policy: ShardingPolicy):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_pspecs(tree, mesh, cfg, policy))
+
+
+# -- activations / batches ---------------------------------------------------
+def batch_specs(mesh, batch_tree, *, accum: bool = False):
+    """Token batches: batch dim over the data axes.  With gradient
+    accumulation the leading dim is the accumulation index (unsharded) and
+    the batch dim is second."""
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        batch_axis = 1 if accum else 0
+        axes = [None] * len(leaf.shape)
+        if leaf.shape[batch_axis] % _prod(mesh, dp) == 0:
+            axes[batch_axis] = dp
+        else:
+            import warnings
+            warnings.warn(
+                f"batch dim {leaf.shape[batch_axis]} does not divide the "
+                f"data axes (x{_prod(mesh, dp)}): batch will be REPLICATED "
+                f"— lower grad_accum so microbatch >= dp (measured 46x "
+                f"collective blow-up on qwen tp1; EXPERIMENTS.md §Perf)",
+                stacklevel=2)
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_specs(mesh, cache_tree, cfg: ModelConfig, policy: ShardingPolicy):
+    """Decode caches.  Stacked leading period dim; batch dim next.  If the
+    batch is unshardable (long-context batch=1), shard the cache sequence
+    dim over the data axes instead (sequence parallelism for the cache)."""
+    dp = data_axes(mesh)
+    ndp = _prod(mesh, dp)
+
+    def spec(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        name = p.rsplit("/", 1)[-1]
+        is_kv = name in ("k", "v", "cross_k", "cross_v")
+        if p.endswith("pos"):
+            return P()
+        axes: list = [None] * len(shape)
+        # layout: (periods, B, ...) for caches
+        if len(shape) >= 2 and shape[1] % ndp == 0:
+            axes[1] = dp
+        elif policy.seq_shard_cache and is_kv:
+            # (periods, B, C, KV, hd): batch unshardable (long-context
+            # B=1) — shard capacity over the data axes instead
+            if len(shape) >= 3 and shape[2] % ndp == 0:
+                axes[2] = dp
+        # model axis: prefer kv heads; else shard the capacity dim
+        # (flash-decoding-style sequence-parallel cache — without this the
+        # 33B+ decode cells exceed 16 GB/chip; EXPERIMENTS.md §Perf)
+        mdl = mesh.shape["model"]
+        if len(shape) == 5 and shape[3] % mdl == 0:
+            axes[3] = "model"
+        elif is_kv and len(shape) >= 3 and axes[2] is None \
+                and shape[2] % mdl == 0:
+            axes[2] = "model"
+        elif name == "conv" and len(shape) == 4 and shape[3] % mdl == 0:
+            axes[3] = "model"          # mamba conv history: d_inner over tp
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def _prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)

@@ -1,0 +1,157 @@
+"""Step builders: train (grad-accum + optimizer), prefill, decode.
+
+These are the functions the launcher jits with explicit in/out shardings
+and the dry-run lowers AOT for every (arch x shape x mesh) cell."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeCfg
+from ..models import build_model
+from ..optim import cosine_schedule, get_optimizer
+
+
+@dataclass
+class StepBundle:
+    """A step function plus the abstract input values to lower it with."""
+    fn: Callable
+    arg_specs: tuple          # pytree of jax.ShapeDtypeStruct
+    kind: str
+
+
+def _tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
+                    warmup: int = 2000, total_steps: int = 100_000,
+                    grad_accum: int | None = None, impl: str | None = None,
+                    grad_shardings=None):
+    """(params, opt_state, step, batch) -> (params, opt_state, metrics).
+
+    batch leaves are shaped (accum, micro_batch, ...); gradients are
+    accumulated over the leading dim with a lax.scan (fp32 accumulators),
+    then a single optimizer update is applied.
+
+    grad_shardings: optional NamedSharding tree matching params — pins the
+    fp32 accumulator's layout (GSPMD sharding propagation through while-
+    loop carries is weak; without this the accumulator replicates)."""
+    model = build_model(cfg, impl=impl)
+    opt = get_optimizer(cfg.optimizer, cosine_schedule(lr, warmup, total_steps))
+    accum = grad_accum or cfg.grad_accum
+
+    def loss_of(params, mb):
+        return model.loss_fn(params, mb)[0]
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.lax.with_sharding_constraint(tree, grad_shardings)
+
+    def train_step(params, opt_state, step, batch):
+        if accum == 1:
+            mb = jax.tree.map(lambda x: x[0], batch)
+            loss, grads = jax.value_and_grad(loss_of)(params, mb)
+            grads = pin(grads)   # FSDP shards: sync becomes reduce-scatter
+        else:
+            def body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                g32 = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+                return (pin(_tree_add(gsum, g32)), lsum + l), None
+
+            g0 = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, 0.0), batch)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        new_params, new_state = opt.update(grads, opt_state, params, step)
+        metrics = {"loss": loss, "step": step + 1}
+        return new_params, new_state, metrics
+
+    return model, opt, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, capacity: int | None = None,
+                      impl: str | None = None):
+    from ..models.lm import prefill
+
+    model = build_model(cfg, impl=impl)
+
+    def step(params, batch):
+        return prefill(cfg, params, batch, capacity=capacity, impl=impl)
+
+    return model, step
+
+
+def make_decode_step(cfg: ModelConfig, *, impl: str | None = None):
+    model = build_model(cfg, impl=impl)
+
+    def decode(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return model, decode
+
+
+# ===========================================================================
+# Abstract input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ===========================================================================
+def batch_struct(cfg: ModelConfig, shape: ShapeCfg, *, accum: int | None = None,
+                 dtype=jnp.int32):
+    """Abstract training/prefill batch for a shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    n_text = S - (cfg.num_prefix if cfg.frontend == "vit_stub" else 0)
+    lead = (accum, B // accum) if accum else (B,)
+    sds = jax.ShapeDtypeStruct
+    batch: dict[str, Any] = {
+        "tokens": sds((*lead, n_text), jnp.int32),
+    }
+    if shape.kind == "train":
+        batch["labels"] = sds((*lead, n_text), jnp.int32)
+    if cfg.frontend == "vit_stub":
+        batch["prefix_embeds"] = sds((*lead, cfg.num_prefix, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.encdec:
+        batch["frames"] = sds((*lead, cfg.num_prefix, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def abstract_params(model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(opt, params_struct):
+    return jax.eval_shape(opt.init, params_struct)
+
+
+def abstract_cache(model, cfg: ModelConfig, shape: ShapeCfg, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg, *, impl: str | None = None,
+                grad_shardings=None):
+    """The full abstract argument tuple for the cell's step function."""
+    if shape.kind == "train":
+        model, opt, fn = make_train_step(cfg, impl=impl,
+                                         grad_shardings=grad_shardings)
+        params = abstract_params(model)
+        opt_state = abstract_opt_state(opt, params)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        batch = batch_struct(cfg, shape, accum=cfg.grad_accum)
+        return StepBundle(fn, (params, opt_state, step, batch), "train")
+    if shape.kind == "prefill":
+        model, fn = make_prefill_step(cfg, capacity=shape.seq_len, impl=impl)
+        params = abstract_params(model)
+        batch = batch_struct(cfg, shape)
+        return StepBundle(fn, (params, batch), "prefill")
+    # decode
+    model, fn = make_decode_step(cfg, impl=impl)
+    params = abstract_params(model)
+    cache = abstract_cache(model, cfg, shape)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return StepBundle(fn, (params, cache, tokens), "decode")

@@ -1,0 +1,1 @@
+from .lm import build_model  # noqa: F401

@@ -1,0 +1,71 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+Used for the 400B-class configs (jamba-1.5-large, llama4-maverick): AdamW's
+8 bytes/param of fp32 moments does not fit a single 256-chip v5e pod at
+398B params; Adafactor's row+column factors are ~O(sqrt) of that.  This is
+itself one of the framework's distributed-optimization features."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .api import Optimizer
+from .adamw import global_norm
+
+
+def adafactor(lr, *, decay: float = 0.99, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def factored(p) -> bool:
+        return p.ndim >= 2 and min(p.shape[-2:]) >= min_dim_size_to_factor
+
+    def init_leaf(p):
+        if factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),          # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(params):
+        return {"f": jax.tree.map(init_leaf, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** -0.8            # paper's decay schedule toward `decay`
+        beta = jnp.minimum(beta, decay)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], eps)) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            newp = p.astype(jnp.float32) - lr_t * u
+            if weight_decay and p.ndim >= 2:
+                newp = newp - lr_t * weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), new_s
+
+        out = jax.tree.map(upd, params, grads, state["f"],
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("v" in x or "vr" in x))
+        # out leaves are (param, state) tuples at the positions of params
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda o: o[1], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"f": new_state}
+
+    return Optimizer(init=init, update=update, name="adafactor")

@@ -1,0 +1,60 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+State per parameter: fp32 m and v (ZeRO-style sharding is applied by the
+launcher's sharding rules, not here)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .api import Optimizer
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw(lr, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        gnorm = global_norm(grads)
+        scale = 1.0
+        if clip_norm is not None:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            step_val = mhat / (jnp.sqrt(vhat) + eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            if p.ndim >= 2:
+                step_val = step_val + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr_t * step_val
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init=init, update=update, name="adamw")

@@ -1,0 +1,25 @@
+"""Minimal optimizer API (optax-style pure functions, no external deps)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params, step) ->
+    (new_params, new_state).  All pure pytree->pytree functions."""
+
+    init: Callable
+    update: Callable
+    name: str = "opt"
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    from .adafactor import adafactor
+    from .adamw import adamw
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,6 @@
+from .failures import FailureInjector, SimulatedNodeFailure
+from .straggler import StragglerMonitor
+from .trainer import TrainLoopConfig, run_resilient, train_loop
+
+__all__ = ["FailureInjector", "SimulatedNodeFailure", "StragglerMonitor",
+           "TrainLoopConfig", "run_resilient", "train_loop"]

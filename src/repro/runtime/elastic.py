@@ -1,0 +1,76 @@
+"""Elastic scaling: re-plan + reshard when the chip budget changes.
+
+The paper's motivation is exactly this ("scaling a program to a larger or
+smaller processor array requires manually re-programming all objects and
+channels"); here the planner re-solves the trade-off and the checkpoint
+layer reshards the state:
+
+    1. drain + checkpoint (atomic)
+    2. planner.replan(cfg, shape, old_plan, new_chips)  -> new ExecutionPlan
+    3. build the new mesh/shardings; restore the checkpoint against them
+       (restore_checkpoint(..., shardings=new))   -> resharded state
+    4. resume the step loop (recompile happens on first step)
+
+``rescale()`` performs 2-3 and returns everything the trainer needs; the
+scale-change drill in tests/test_system.py runs a full
+train -> shrink -> train -> grow -> train cycle and asserts loss continuity
+and bitwise data-order determinism.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from .. import sharding_ctx as sctx
+from ..configs.base import ModelConfig, ShapeCfg
+from ..core import planner
+from ..launch import sharding as shd
+
+
+@dataclass
+class RescaleResult:
+    plan: planner.PlanResult
+    execution: planner.ExecutionPlan
+    mesh: object
+    diff: dict
+
+    def summary(self) -> str:
+        o, n = self.diff["chips"]
+        return (f"rescale: {o:.0f} -> {n:.0f} chips, "
+                f"throughput x{self.diff['throughput_ratio']:.2f}, "
+                f"{len(self.diff['stages_changed'])} stages re-laid-out, "
+                f"mesh {self.execution.mesh_shape}")
+
+
+def plan_for_chips(cfg: ModelConfig, shape: ShapeCfg, chips: int,
+                   engine: str = "heuristic") -> planner.PlanResult:
+    return planner.plan(cfg, shape, chips=chips, engine=engine)
+
+
+def rescale(cfg: ModelConfig, shape: ShapeCfg, old_plan: planner.PlanResult,
+            *, new_chips: int, devices=None,
+            engine: str = "heuristic") -> RescaleResult:
+    """Re-plan for ``new_chips`` and build the new mesh/shardings.
+
+    ``devices``: the devices to build the mesh over (defaults to all local;
+    at pod scale this is the post-repair slice).  The logical (dp, tp)
+    comes from the plan projected onto however many devices exist.
+    """
+    new_plan, diff = planner.replan(cfg, shape, old_plan,
+                                    new_chips=new_chips, engine=engine)
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    ex = planner.to_execution(new_plan, cfg=cfg, chips=n)
+    import numpy as np
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(devices).reshape(ex.mesh_shape), ex.mesh_axes)
+    return RescaleResult(plan=new_plan, execution=ex, mesh=mesh, diff=diff)
+
+
+def reshard_tree(tree, mesh, cfg: ModelConfig,
+                 policy: shd.ShardingPolicy | None = None):
+    """device_put an existing (restored) pytree against a new mesh."""
+    policy = policy or shd.ShardingPolicy()
+    sh = shd.tree_shardings(tree, mesh, cfg, policy)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sh), sh

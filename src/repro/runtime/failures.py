@@ -1,0 +1,44 @@
+"""Deterministic failure injection for fault-tolerance tests/drills.
+
+At real pod scale, failures arrive as ICI timeouts, host kernel panics and
+preemptions; the runtime's contract is the same either way: the step loop
+dies, the job controller restarts it, and training resumes from the last
+committed checkpoint with identical data order.  The injector reproduces
+that contract deterministically so it can be asserted in CI.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+class SimulatedNodeFailure(RuntimeError):
+    """A node 'died' (injected). The trainer must not catch this per-step;
+    only the resilient wrapper restarts from the last checkpoint."""
+
+
+@dataclass
+class FailureInjector:
+    """Schedule: {step: kind}; kind in {"crash", "stall:<seconds>"}.
+
+    ``crash``  — raise SimulatedNodeFailure before the step executes.
+    ``stall:x``— sleep x seconds (a straggler; the monitor should flag it).
+    Each entry fires once (restarts don't re-fire a consumed failure —
+    mirroring a replaced node).
+    """
+    schedule: dict[int, str] = field(default_factory=dict)
+    fired: set[int] = field(default_factory=set)
+    log: list[tuple[int, str]] = field(default_factory=list)
+
+    def maybe_fail(self, step: int) -> None:
+        kind = self.schedule.get(step)
+        if kind is None or step in self.fired:
+            return
+        self.fired.add(step)
+        self.log.append((step, kind))
+        if kind == "crash":
+            raise SimulatedNodeFailure(f"injected node failure at step {step}")
+        if kind.startswith("stall:"):
+            time.sleep(float(kind.split(":", 1)[1]))
+            return
+        raise ValueError(f"unknown failure kind {kind!r}")

@@ -1,0 +1,78 @@
+"""Straggler detection & mitigation hooks.
+
+Pod-scale rationale: with synchronous data parallelism one slow host sets
+the step time for all N.  The monitor keeps a rolling median of step
+durations (per host when per-host timings are available — multi-host
+deployments feed heartbeat times; single-process runs feed their own) and
+flags steps slower than ``threshold``x the median.  Mitigation is a
+pluggable callback; the default logs and counts.  Real deployments attach
+actions like: demote the host from the next slice assignment (elastic
+re-plan, see runtime.elastic), or switch the data loader to skip-straggler
+mode (drop the slowest host's microbatch — bounded staleness).
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    host: int
+    duration: float
+    median: float
+
+    @property
+    def slowdown(self) -> float:
+        return self.duration / max(self.median, 1e-9)
+
+
+@dataclass
+class StragglerMonitor:
+    window: int = 32
+    threshold: float = 2.5
+    warmup_steps: int = 3          # compile/first-touch steps are not stragglers
+    on_straggler: Callable[[StragglerEvent], None] | None = None
+    _history: list[float] = field(default_factory=list)
+    events: list[StragglerEvent] = field(default_factory=list)
+    observed: int = 0
+
+    def observe(self, step: int, duration: float | dict[int, float]) -> list[StragglerEvent]:
+        """Feed one step's duration (or {host: duration}).  Returns events
+        flagged for this step."""
+        per_host = duration if isinstance(duration, dict) else {0: duration}
+        self.observed += 1
+        flagged: list[StragglerEvent] = []
+        if self._history and self.observed > self.warmup_steps:
+            med = statistics.median(self._history)
+            for host, dur in per_host.items():
+                if dur > self.threshold * med:
+                    ev = StragglerEvent(step=step, host=host, duration=dur,
+                                        median=med)
+                    flagged.append(ev)
+                    self.events.append(ev)
+                    if self.on_straggler is not None:
+                        self.on_straggler(ev)
+        if self.observed > self.warmup_steps:
+            # the median tracks healthy steps; don't let stragglers poison it
+            healthy = [d for d in per_host.values()
+                       if not self._history
+                       or d <= self.threshold * statistics.median(self._history)]
+            self._history.extend(healthy or per_host.values())
+        else:
+            self._history.extend(per_host.values())
+        if len(self._history) > self.window:
+            self._history = self._history[-self.window:]
+        return flagged
+
+    def new_incarnation(self) -> None:
+        """Restart boundary: the next ``warmup_steps`` steps recompile and
+        must not be flagged."""
+        self.observed = 0
+        self._history.clear()
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self._history) if self._history else 0.0

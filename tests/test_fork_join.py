@@ -1,0 +1,83 @@
+"""Fork/join trees and node combining math (Eq. 8-14, Fig. 8)."""
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fork_join import (ForkJoinModel, JPEG_CALIBRATED, LITERAL,
+                                  combined_tree_overhead_eq14,
+                                  combining_savings, layer_rates,
+                                  replicas_needed, tree_height,
+                                  tree_overhead_eq9)
+
+
+def test_eq8_replicas():
+    assert replicas_needed(33, 1) == 33
+    assert replicas_needed(8, 2) == 4
+    assert replicas_needed(7, 2) == 4  # ceil
+
+
+def test_eq9_literal_values():
+    assert tree_overhead_eq9(4, 4) == 1
+    assert tree_overhead_eq9(16, 4) == 1 + 4
+    assert tree_overhead_eq9(64, 4) == 1 + 4 + 16
+    assert tree_overhead_eq9(512, 4) == 1 + 4 + 16 + 64 + 256  # H=5
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 4096), st.integers(2, 8))
+def test_eq9_vs_eq14_savings(nr, nf):
+    """Eq. 14 = Eq. 9 minus the leaf layer; savings = nf^(H-1)."""
+    H = tree_height(nr, nf)
+    assert nf ** max(H - 1, 0) < nr * nf  # sanity on H
+    assert tree_overhead_eq9(nr, nf) - combined_tree_overhead_eq14(nr, nf) == \
+        combining_savings(nr, nf)
+
+
+def test_paper_75pct_claim():
+    """nf=4: 'more than 75% overhead area will be saved' by one combining
+    step (for trees with H >= 2)."""
+    for H in (2, 3, 4, 5):
+        nr = 4 ** H
+        save = combining_savings(nr, 4)
+        assert save / tree_overhead_eq9(nr, 4) >= 0.75
+
+
+def test_eq10_11_layer_rates():
+    # nr = nf^H replicas; at layer h: v_in = v_S * nf^(h-1) = v_D / nf^(H+1-h)
+    v_s, nf, H = 2.0, 4, 3
+    v_d = v_s * nf ** H
+    for h in range(1, H + 1):
+        v_in, v_out = layer_rates(v_s, v_d, nf, h, H)
+        assert math.isclose(v_in, v_s * nf ** (h - 1))
+        assert math.isclose(v_in, v_d / nf ** (H + 1 - h))
+        assert math.isclose(v_out, v_in * nf)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 1024), st.integers(1, 1024))
+def test_overhead_symmetric_and_zero_when_matched(ns, nd):
+    m = LITERAL
+    assert m.overhead(ns, nd) == m.overhead(nd, ns)
+    assert m.overhead(ns, ns) == 0.0
+
+
+def test_free_fanout_variant():
+    m = ForkJoinModel(nf=4, node_area=1.0, count_root=False)
+    assert m.overhead(1, 4) == 0.0         # within fan-out: free (paper text)
+    assert m.overhead(1, 16) == 4.0        # Eq9(16,4)=5 minus the root
+    assert LITERAL.overhead(1, 4) == 1.0   # Eq. 9 literal counts the root
+
+
+def test_jpeg_calibrated_matches_published_overheads():
+    """Published Table-2 ILP fork/join overhead column vs calibrated model."""
+    m = JPEG_CALIBRATED
+    assert abs(m.replication_overhead(512) - 10880) / 10880 < 0.01
+    assert abs(m.replication_overhead(128) - 2688) / 2688 < 0.02
+
+
+def test_grouped_overhead_uses_fan_ratio():
+    # 128 producers feeding 512 consumers: fan 4 => one routing layer per producer.
+    m = LITERAL
+    assert m.overhead(128, 512) == 128 * 1
+    assert m.overhead(32, 512) == 32 * tree_overhead_eq9(16, 4)

@@ -1,0 +1,76 @@
+"""Intra-Node Optimizer: pipelining / expansion / clustering (Figs. 2-4)."""
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.intra_node import (CompositeBody, PrimOp, enumerate_impls,
+                                   schedule_for_target)
+from repro.graphs.nbody import FORCE_BODY, force_impls
+
+
+def test_nbody_sum_ii_is_33():
+    assert FORCE_BODY.total_ii() == 33
+
+
+def test_nbody_naive_pipeline_stalls_at_div():
+    # Fig. 2: one PE per op, II limited by the 8-cycle division.
+    s = schedule_for_target(FORCE_BODY, 8.0)
+    assert s.impl.ii == 8.0
+    assert not s.expansions  # nothing needs expansion at II=8
+
+
+def test_nbody_expansion_reaches_ii1():
+    # Fig. 3: expanding div (and sqrt) round-robin reaches II = 1.
+    s = schedule_for_target(FORCE_BODY, 1.0)
+    assert s.impl.ii == 1.0
+    assert s.expansions["f"] == 8      # 8 dividers
+    assert s.expansions["r"] == 8      # 8 sqrt units
+    assert s.impl.area == FORCE_BODY.total_ii()  # full expansion area = sum ii
+
+
+def test_nbody_frontier_spans_1_to_33():
+    # Fig. 4: inverse throughput varies from 1 to 33.
+    impls = force_impls()
+    iis = [im.ii for im in impls]
+    assert min(iis) == 1 and max(iis) == 33
+    # single-PE point has area 1; fastest has area 33
+    by_ii = {im.ii: im for im in impls}
+    assert by_ii[33].area == 1
+    assert by_ii[1].area == 33
+    # frontier is monotone: slower => no more area
+    for a, b in zip(impls, impls[1:]):
+        assert a.ii < b.ii and a.area > b.area
+
+
+def test_replication_equivalence_claim():
+    """Paper: II=1 reachable by replicating the II=33 impl 33x (area 33) or
+    using the fastest impl directly (area 33) — identical area."""
+    by_ii = {im.ii: im for im in force_impls()}
+    assert by_ii[33].area * 33 == by_ii[1].area * 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["add", "mul", "div", "sqrt", "sub"]),
+                min_size=1, max_size=12),
+       st.integers(min_value=1, max_value=40))
+def test_schedule_meets_target_and_area_sane(kinds, target):
+    ops = tuple(PrimOp(f"o{i}", k, deps=(f"o{i-1}",) if i else ())
+                for i, k in enumerate(kinds))
+    body = CompositeBody(ops=ops)
+    s = schedule_for_target(body, float(target))
+    assert s.impl.ii <= target + 1e-9
+    # area is between 1 PE and full expansion
+    assert 1 <= s.impl.area <= body.total_ii()
+    # every op is placed exactly once
+    placed = [n for c in s.clusters for n in c]
+    assert sorted(placed) == sorted(o.name for o in ops)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from(["add", "mul", "div"]), min_size=1, max_size=10))
+def test_frontier_pareto(kinds):
+    ops = tuple(PrimOp(f"o{i}", k) for i, k in enumerate(kinds))
+    impls = enumerate_impls(CompositeBody(ops=ops))
+    for a, b in zip(impls, impls[1:]):
+        assert a.ii < b.ii and a.area > b.area

@@ -1,0 +1,86 @@
+"""Reproduction of the paper's JPEG experiment (§III.B, Tables 1-2).
+
+Published-table notes (see EXPERIMENTS.md §Reproduction):
+  * ILP totals reproduce at v_tgt = 1 and 4 to <1%; the v=2 row's published
+    overhead (5376) is anomalous (its own Eq. 9 cannot produce it and it is
+    2x the v=4 row for 2x the replicas under any tree model we tried).
+  * The published Encoding replica column is 2x off against the paper's own
+    totals for v >= 2 (totals require nr = 512/v).
+  * Heuristic totals: we match v=8 exactly and find slightly better points
+    than published for v in {1, 2, 4} (the published heuristic is itself a
+    heuristic; ours explores the same move set).
+"""
+import pytest
+
+from repro.core import heuristic, ilp
+from repro.core.fork_join import JPEG_CALIBRATED
+from repro.core.throughput import analyze
+from repro.graphs.jpeg import TABLE2_TOTALS, build_stg
+
+
+@pytest.fixture(scope="module")
+def g():
+    return build_stg()
+
+
+@pytest.mark.parametrize("v,rel", [(1, 0.01), (4, 0.01)])
+def test_ilp_totals_match_published(g, v, rel):
+    res = ilp.min_area(g, v, JPEG_CALIBRATED)
+    pub = TABLE2_TOTALS[v][0]
+    assert res.feasible
+    assert abs(res.total_area - pub) / pub < rel
+
+
+@pytest.mark.parametrize("v", [1, 2, 4, 8])
+def test_ilp_selects_single_copies_plus_encoder_replicas(g, v):
+    """Table 2: ILP picks one copy of the matching CC/DCT/Quant version and
+    512/v encoder replicas."""
+    res = ilp.min_area(g, v, JPEG_CALIBRATED)
+    assert res.selection.choices["encode"] == ("v1", 512 // v)
+    for mod in ("color", "dct", "quant"):
+        impl, nr = res.selection.choices[mod]
+        assert nr == 1
+        assert g.nodes[mod].impl(impl).ii <= v
+
+
+@pytest.mark.parametrize("v", [1, 2, 4, 8])
+def test_heuristic_beats_ilp(g, v):
+    """The paper's headline: combining gives the heuristic a big area win
+    (37% at v=2 against the published ILP)."""
+    ri = ilp.min_area(g, v, JPEG_CALIBRATED)
+    rh = heuristic.min_area(g, v, JPEG_CALIBRATED)
+    assert rh.feasible and ri.feasible
+    assert rh.total_area <= ri.total_area * 0.80  # >= 20% saving everywhere
+    # against the PUBLISHED ILP totals the saving is >= 26%
+    assert rh.total_area <= TABLE2_TOTALS[v][0] * 0.74
+
+
+@pytest.mark.parametrize("v", [1, 2, 4, 8])
+def test_heuristic_at_least_as_good_as_published(g, v):
+    rh = heuristic.min_area(g, v, JPEG_CALIBRATED)
+    assert rh.total_area <= TABLE2_TOTALS[v][1] + 1e-6
+
+
+def test_heuristic_v8_exactly_published(g):
+    rh = heuristic.min_area(g, 8, JPEG_CALIBRATED)
+    assert rh.total_area == 1736
+    assert rh.overhead_area == 0  # all fans within nf=4 (published: 0)
+
+
+@pytest.mark.parametrize("v", [1, 2, 4, 8])
+def test_solutions_meet_throughput_target(g, v):
+    for solver in (ilp.min_area, heuristic.min_area):
+        res = solver(g, v, JPEG_CALIBRATED)
+        assert analyze(g, res.selection).v_app <= v + 1e-9
+
+
+def test_area_mode_inverts_throughput_mode(g):
+    """Feeding mode-2 results' area back into mode 1 recovers >= throughput."""
+    for v in (1, 2, 4, 8):
+        rh = heuristic.min_area(g, v, JPEG_CALIBRATED)
+        back = heuristic.max_throughput(g, rh.total_area, JPEG_CALIBRATED)
+        assert back.feasible
+        assert back.v_app <= v + 1e-9
+        ri = ilp.min_area(g, v, JPEG_CALIBRATED)
+        backi = ilp.max_throughput(g, ri.total_area, JPEG_CALIBRATED)
+        assert backi.feasible and backi.v_app <= v + 1e-9

@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+ATTN_SHAPES = [
+    # (B, Sq, Sk, H, KV, D, block_q, block_k)
+    (1, 16, 16, 2, 2, 16, 8, 8),       # MHA, tiny
+    (2, 64, 64, 4, 2, 32, 16, 16),     # GQA 2:1
+    (1, 33, 33, 8, 1, 64, 16, 16),     # MQA, ragged seq
+    (2, 32, 128, 4, 4, 32, 16, 32),    # cross/prefix (Sk > Sq)
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_oracle(shape, dtype, causal):
+    b, sq, sk, h, kv, d, bq, bk = shape
+    rng = np.random.default_rng(hash((shape, causal)) % 2**31)
+    q = _rand(rng, (b, sq, h, d), dtype)
+    k = _rand(rng, (b, sk, kv, d), dtype)
+    v = _rand(rng, (b, sk, kv, d), dtype)
+    off = sk - sq
+    got = flash_attention(q, k, v, causal=causal, kv_offset=off,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=causal, kv_offset=off)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [1, 7, 16, 64])
+def test_flash_attention_sliding_window(window):
+    rng = np.random.default_rng(7)
+    q = _rand(rng, (2, 48, 4, 32), jnp.float32)
+    k = _rand(rng, (2, 48, 2, 32), jnp.float32)
+    v = _rand(rng, (2, 48, 2, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=16, block_k=16, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_block_sparsity_skips_are_correct():
+    """Causal + window => many fully-masked blocks; results must not change."""
+    rng = np.random.default_rng(8)
+    q = _rand(rng, (1, 256, 2, 16), jnp.float32)
+    k = _rand(rng, (1, 256, 2, 16), jnp.float32)
+    v = _rand(rng, (1, 256, 2, 16), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=32,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.mha_reference(q, k, v, causal=True, window=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+SSD_SHAPES = [
+    # (B, L, H, P, N, chunk)
+    (1, 16, 1, 4, 8, 4),
+    (2, 64, 3, 8, 16, 16),
+    (1, 50, 2, 16, 32, 16),   # ragged
+    (2, 128, 4, 64, 128, 32),  # production-like dims
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_oracle(shape, dtype):
+    b, l, h, p, n, chunk = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    x = _rand(rng, (b, l, h, p), dtype)
+    dt = jnp.asarray(rng.uniform(0.05, 0.8, size=(b, l, h)), dtype)
+    a = jnp.asarray(-rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    bb = _rand(rng, (b, l, n), dtype)
+    cc = _rand(rng, (b, l, n), dtype)
+    got_y, got_s = ssd_scan(x, dt, a, bb, cc, chunk=chunk, interpret=True)
+    want_y, want_s = ref.ssd_reference(x, dt, a, bb, cc)
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_y, np.float32),
+                               np.asarray(want_y, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), **tol)
+
+
+def test_ssd_chunked_ref_matches_sequential():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (2, 37, 3, 8), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 0.8, size=(2, 37, 3)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 1.5, size=(3,)), jnp.float32)
+    b = _rand(rng, (2, 37, 16), jnp.float32)
+    c = _rand(rng, (2, 37, 16), jnp.float32)
+    y1, s1 = ref.ssd_reference(x, dt, a, b, c)
+    y2, s2 = ref.ssd_chunked(x, dt, a, b, c, chunk=8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-5, rtol=1e-5)
+
+
+def test_ssd_decode_step_consistent_with_scan():
+    rng = np.random.default_rng(4)
+    B, L, H, P, N = 1, 12, 2, 4, 8
+    x = _rand(rng, (B, L, H, P), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 0.8, size=(B, L, H)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 1.5, size=(H,)), jnp.float32)
+    b = _rand(rng, (B, L, N), jnp.float32)
+    c = _rand(rng, (B, L, N), jnp.float32)
+    want_y, want_s = ref.ssd_reference(x, dt, a, b, c)
+    s = jnp.zeros((B, H, P, N), jnp.float32)
+    for t in range(L):
+        y, s = ref.ssd_decode_step(s, x[:, t], dt[:, t], a, b[:, t], c[:, t])
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want_s), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want_y[:, -1]), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 16), (3, 5, 64), (2, 7, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_oracle(shape, dtype):
+    rng = np.random.default_rng(5)
+    x = _rand(rng, shape, dtype)
+    w = _rand(rng, shape[-1:], jnp.float32)
+    got = rmsnorm(x, w, block_rows=2, interpret=True)
+    want = ref.rmsnorm_reference(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_ops_dispatch_ref_on_cpu():
+    assert ops.resolve_impl(None) == "ref"
+    assert ops.resolve_impl("interpret") == "interpret"
+    rng = np.random.default_rng(6)
+    q = _rand(rng, (1, 8, 2, 16), jnp.float32)
+    k = _rand(rng, (1, 8, 2, 16), jnp.float32)
+    v = _rand(rng, (1, 8, 2, 16), jnp.float32)
+    a = ops.attention(q, k, v)          # ref path
+    b = ops.attention(q, k, v, impl="interpret", block_q=8, block_k=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)

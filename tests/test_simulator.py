@@ -1,0 +1,167 @@
+"""KPN simulator: functional equivalence + timed throughput validation."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import heuristic
+from repro.core.fork_join import LITERAL, ForkJoinModel
+from repro.core.simulate import run, run_functional
+from repro.core.stg import STG, Impl, Node, Selection, unit_rate_node
+from repro.core.throughput import analyze
+from repro.core.transform import materialize
+from repro.graphs import jpeg, nbody, streamit
+
+
+def _id_chain(iis):
+    g = STG()
+    g.add_node(Node("src", impls=(Impl("s", 0, 1e-9),), kind="source"))
+    prev = "src"
+    for k, ii in enumerate(iis):
+        def mk(k):
+            def fn(inputs, state):
+                return [[("n%d" % k, t) if False else inputs[0][0] + 1]], state
+            return fn
+        g.add_node(unit_rate_node(f"n{k}", [Impl("v1", 1, ii)], fn=mk(k)))
+        g.connect(prev, f"n{k}")
+        prev = f"n{k}"
+    g.add_node(Node("out", impls=(Impl("t", 0, 1e-9),), kind="sink"))
+    g.connect(prev, "out")
+    g.validate()
+    return g
+
+
+def test_functional_chain():
+    g = _id_chain([1, 1, 1])
+    outs = run_functional(g, Selection.fastest(g), {"src": list(range(10))})
+    assert outs["out"] == [x + 3 for x in range(10)]
+
+
+def test_timed_throughput_matches_analysis():
+    g = _id_chain([2, 7, 3])
+    sel = Selection.fastest(g)
+    res = run(g, sel, {"src": list(range(200))})
+    sim_v = res.inverse_throughput("out")
+    ana_v = analyze(g, sel).v_app
+    assert math.isclose(sim_v, ana_v, rel_tol=0.05)
+
+
+def test_timed_throughput_with_replication():
+    g = _id_chain([1, 8, 1])
+    sel = Selection.fastest(g).set("n1", "v1", 8)
+    rep = materialize(g, sel, LITERAL)
+    res = run(rep.stg, rep.selection, {"src": list(range(400))})
+    # replicated middle node no longer the bottleneck: v ~ fork/join ii = 1
+    assert res.inverse_throughput("out") < 8 * 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=4),
+       st.sampled_from([1, 2, 4, 8, 16]),
+       st.sampled_from([2, 3, 4]))
+def test_replication_preserves_streams(iis, nr, nf):
+    """Property: materialised graphs are stream-equivalent to the original
+    (KPN determinism through fork/join round-robin trees)."""
+    g = _id_chain(iis)
+    sel = Selection.fastest(g)
+    mid = f"n{len(iis)//2}"
+    sel.set(mid, "v1", nr)
+    rep = materialize(g, sel, ForkJoinModel(nf=nf))
+    inputs = {"src": list(range(64))}
+    want = run_functional(g, Selection.fastest(g), inputs)["out"]
+    got = run_functional(rep.stg, rep.selection, inputs)["out"]
+    assert got == want
+
+
+def test_double_replication_preserves_streams():
+    g = _id_chain([4, 8])
+    sel = Selection.fastest(g).set("n0", "v1", 4).set("n1", "v1", 8)
+    rep = materialize(g, sel, ForkJoinModel(nf=2))
+    inputs = {"src": list(range(96))}
+    want = run_functional(g, Selection.fastest(g), inputs)["out"]
+    assert run_functional(rep.stg, rep.selection, inputs)["out"] == want
+
+
+def test_join_then_fork_alignment():
+    g = _id_chain([8, 2, 8])
+    sel = Selection.fastest(g).set("n0", "v1", 8).set("n1", "v1", 2).set("n2", "v1", 8)
+    rep = materialize(g, sel, ForkJoinModel(nf=4))
+    inputs = {"src": list(range(128))}
+    want = run_functional(g, Selection.fastest(g), inputs)["out"]
+    assert run_functional(rep.stg, rep.selection, inputs)["out"] == want
+
+
+# --- application graphs -----------------------------------------------------
+def test_jpeg_functional_reference():
+    g = jpeg.build_stg()
+    blocks = jpeg.random_blocks(12)
+    outs = run_functional(g, Selection.fastest(g), {"camera": blocks})
+    assert outs["bitstream"] == jpeg.reference_pipeline(blocks)
+
+
+@pytest.mark.parametrize("v", [1, 4])
+def test_jpeg_heuristic_solution_is_stream_equivalent(v):
+    from repro.core.fork_join import JPEG_CALIBRATED
+    g = jpeg.build_stg()
+    res = heuristic.min_area(g, v, JPEG_CALIBRATED)
+    rep = materialize(g, res.selection, JPEG_CALIBRATED)
+    blocks = jpeg.random_blocks(48)
+    want = jpeg.reference_pipeline(blocks)
+    got = run_functional(rep.stg, rep.selection, {"camera": blocks})["bitstream"]
+    assert got == want
+
+
+def test_nbody_functional():
+    g = nbody.build_stg()
+    pairs = nbody.random_pairs(16)
+    outs = run_functional(g, Selection.fastest(g), {"pairs": pairs})
+    for got, pair in zip(outs["acc"], pairs):
+        want = nbody.force_fn(pair)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_nbody_replicated_33x_reaches_ii1():
+    g = nbody.build_stg()
+    slowest = max(g.nodes["force"].impls, key=lambda im: im.ii)
+    assert slowest.ii == 33
+    sel = Selection.fastest(g).set("force", slowest.name, 33)
+    a = analyze(g, sel)
+    assert a.node_iter_time["force"] == 1.0  # 33/33
+
+
+def test_streamit_fft():
+    g = streamit.build_fft(8)
+    rng = np.random.default_rng(3)
+    blocks = [rng.normal(size=8) + 1j * rng.normal(size=8) for _ in range(6)]
+    outs = run_functional(g, Selection.fastest(g), {"src": blocks})
+    for got, want in zip(outs["out"], streamit.fft_reference(blocks)):
+        np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+def test_streamit_filterbank():
+    g = streamit.build_filterbank()
+    rng = np.random.default_rng(4)
+    blocks = [rng.normal(size=32) for _ in range(5)]
+    outs = run_functional(g, Selection.fastest(g), {"src": blocks})
+    for got, want in zip(outs["out"], streamit.filterbank_reference(g, blocks)):
+        np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+def test_streamit_autocor():
+    g = streamit.build_autocor()
+    rng = np.random.default_rng(5)
+    blocks = [rng.normal(size=16) for _ in range(5)]
+    outs = run_functional(g, Selection.fastest(g), {"src": blocks})
+    for got, want in zip(outs["out"], streamit.autocor_reference(blocks)):
+        np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+def test_streamit_implementation_libraries_nontrivial():
+    """Front-end validation (§III.A): every StreamIt node gets a multi-point
+    implementation frontier."""
+    for g in (streamit.build_fft(8), streamit.build_filterbank(), streamit.build_autocor()):
+        rich = [n for n, node in g.nodes.items()
+                if node.kind == "compute" and len(node.impls) >= 3]
+        assert rich, f"no multi-implementation nodes in {g.nodes.keys()}"

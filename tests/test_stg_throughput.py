@@ -1,0 +1,100 @@
+"""Throughput analysis (Eq. 1, 5, 6, 7) and STG IR invariants."""
+import math
+
+import pytest
+
+from repro.core.stg import STG, Channel, Impl, Node, Selection, unit_rate_node
+from repro.core.throughput import analyze, min_replicas, propagate_targets
+
+
+def chain(iis, rates=None):
+    g = STG()
+    names = [f"n{k}" for k in range(len(iis))]
+    for k, ii in enumerate(iis):
+        g.add_node(unit_rate_node(names[k], [Impl("v1", area=1, ii=ii)]))
+    for a, b in zip(names, names[1:]):
+        g.connect(a, b)
+    g.validate()
+    return g, names
+
+
+def test_inverse_throughput_eq1():
+    im = Impl("x", area=4, ii=12)
+    assert im.v_in(3) == 4 and im.v_out(2) == 6
+
+
+def test_slack_eq5_sign_convention():
+    # A(ii=9) -> B(ii=3): producer starves consumer => positive slack.
+    g, names = chain([9, 3])
+    sel = Selection.fastest(g)
+    a = analyze(g, sel)
+    ch = a.channels[("n0", 0, "n1", 0)]
+    assert ch.v_mo == 9 and ch.v_ei == 3 and ch.slack == 6
+    # replicate producer x3 => matched
+    sel.set("n0", "v1", 3)
+    a = analyze(g, sel)
+    assert a.channels[("n0", 0, "n1", 0)].slack == 0
+
+
+def test_weights_eq6_identify_bottleneck():
+    # paper Fig. 6 style: middle node much slower than its neighbours
+    g, names = chain([1, 8, 1])
+    a = analyze(g, Selection.fastest(g))
+    assert a.weights["n1"] > a.weights["n0"]
+    assert a.weights["n1"] > a.weights["n2"]
+    assert a.bottleneck == "n1"
+
+
+def test_app_inverse_throughput_is_max_over_nodes():
+    g, _ = chain([2, 7, 3])
+    a = analyze(g, Selection.fastest(g))
+    assert a.v_app == 7
+    sel = Selection.fastest(g).set("n1", "v1", 7)
+    assert analyze(g, sel).v_app == 3
+
+
+def test_propagation_eq7_multirate():
+    # n0 emits 2 tokens per firing, n1 consumes 1: n1 must fire 2x faster.
+    g = STG()
+    g.add_node(Node("n0", impls=(Impl("v1", 1, 4),), in_rates=(1,), out_rates=(2,)))
+    g.add_node(Node("n1", impls=(Impl("v1", 1, 4),), in_rates=(1,), out_rates=(1,)))
+    g.connect("n0", "n1")
+    tg = propagate_targets(g, 4.0)
+    assert tg["n0"] == 4.0
+    assert tg["n1"] == 2.0  # Eq. 7: v_out = (v_in * In)/Out halves per-firing budget
+    q = g.repetition_vector()
+    assert q == {"n0": 1, "n1": 2}
+
+
+def test_repetition_vector_rejects_inconsistent_rates():
+    g = STG()
+    g.add_node(Node("a", impls=(Impl("v1", 1, 1),), out_rates=(2, 3)))
+    g.add_node(Node("b", impls=(Impl("v1", 1, 1),), in_rates=(1, 1)))
+    g.connect("a", "b", 0, 0)
+    g.connect("a", "b", 1, 1)
+    with pytest.raises(ValueError):
+        g.repetition_vector()
+
+
+def test_feedback_rejected():
+    g = STG()
+    g.add_node(unit_rate_node("a", [Impl("v1", 1, 1)], n_in=1, n_out=1))
+    g.add_node(unit_rate_node("b", [Impl("v1", 1, 1)], n_in=1, n_out=1))
+    g.connect("a", "b")
+    g.connect("b", "a")
+    with pytest.raises(ValueError, match="feed"):
+        g.topo_order()
+
+
+def test_min_replicas_eq8():
+    assert min_replicas(33, 1) == 33
+    assert min_replicas(32, 1) == 32
+    assert min_replicas(8, 2) == 4
+    assert min_replicas(8, 3) == 3
+
+
+def test_pareto_filters_dominated():
+    n = Node("x", impls=(Impl("a", 10, 4), Impl("b", 12, 4), Impl("c", 5, 8),
+                         Impl("d", 20, 1)))
+    names = {im.name for im in n.pareto()}
+    assert names == {"a", "c", "d"}

@@ -1,0 +1,98 @@
+"""Debug probe: where does the collective wire-byte total come from?
+
+Lowers+compiles one cell, then walks the post-SPMD HLO the same way
+repro.analysis.hlo.collect does, but records per-line attribution:
+(computation, trip-multiplier product, kind, shard bytes, wire bytes).
+Prints the top contributors so the accounting can be hand-verified.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import re
+import sys
+
+from repro.analysis import hlo as H
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs
+from repro.launch import sharding as shd
+from repro.launch.dryrun import _shardings_for
+
+import jax
+
+
+def main(arch="qwen2.5-3b", shape_name="train_4k", tp="16", accum="0",
+         ep_axis="model", moe_impl="einsum"):
+    import dataclasses
+    from repro.models import blocks as _blocks
+    _blocks.set_moe_impl(moe_impl)
+    cfg = get_config(arch)
+    if int(accum):
+        cfg = dataclasses.replace(cfg, grad_accum=int(accum))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(tp=int(tp))
+    policy = shd.ShardingPolicy(fsdp=(shape.kind == "train"),
+                                seq_shard_cache=False, ep_axis=ep_axis)
+    grad_sh = None
+    if shape.kind == "train":
+        from repro.launch.steps import abstract_params
+        from repro.models import build_model
+        params_struct = abstract_params(build_model(cfg))
+        grad_sh = shd.tree_shardings(params_struct, mesh, cfg, policy)
+    bundle = input_specs(cfg, shape, grad_shardings=grad_sh)
+    in_sh = _shardings_for(bundle, mesh, cfg, policy)
+    from repro import sharding_ctx as sctx
+    with mesh, sctx.activate(sctx.from_mesh(mesh,
+                                            ep_data=policy.ep_axis == "data")):
+        jitted = jax.jit(bundle.fn, in_shardings=in_sh)
+        compiled = jitted.lower(*bundle.arg_specs).compile()
+    text = compiled.as_text()
+    comps = H.split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+
+    rows = []
+
+    def walk(comp, mult, depth=0, seen=frozenset()):
+        if comp not in comps or depth > 50 or comp in seen:
+            return
+        seen = seen | {comp}
+        for line in comps[comp]:
+            cm = H._COLLECTIVE_LINE.search(line)
+            if cm:
+                kind = cm.group(2)
+                g = H._group_size(line, 256)
+                shard = H._shape_bytes(cm.group(1))
+                rows.append((comp, mult, kind, g, shard, line.strip()[:160]))
+            wm = H._WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tc = H.trip_count(comps.get(cond, []))
+                print(f"WHILE in {comp}: body={body} cond={cond} trip={tc}")
+                walk(body, mult * tc, depth + 1, seen)
+                continue
+            fm = H._CALL_RE.search(line)
+            if fm:
+                walk(fm.group(1), mult, depth + 1, seen)
+
+    walk(entry, 1.0)
+    rows.sort(key=lambda r: -(r[1] * r[4]))
+    total = 0.0
+    for comp, mult, kind, g, shard, line in rows[:25]:
+        print(f"mult={mult:8.0f} kind={kind:18s} g={g:4d} shard={shard/1e6:10.2f}MB "
+              f"tot_wire={mult*shard*256/1e12:8.3f}TB  comp={comp[:40]}")
+    for comp, mult, kind, g, shard, line in rows:
+        total += mult * shard * 256
+    print(f"\nnum collective lines: {len(rows)}; naive total (shard*256*mult): {total/1e12:.2f} TB")
+    coll = H.collect(text, 256)
+    print("collect() says:", {k: f"{v/1e12:.2f}TB" for k, v in coll.wire_bytes.items()})
+    print("counts:", coll.counts)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,80 @@
+"""Dump the while-loop tree (with conditions) of a compiled cell."""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import re
+import sys
+
+from repro.analysis import hlo as H
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs
+from repro.launch import sharding as shd
+from repro.launch.dryrun import _shardings_for
+
+import jax
+
+
+def main(arch="qwen2.5-3b", shape_name="train_4k", tp="16", accum="0"):
+    import dataclasses
+    cfg = get_config(arch)
+    if int(accum):
+        cfg = dataclasses.replace(cfg, grad_accum=int(accum))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(tp=int(tp))
+    policy = shd.ShardingPolicy(fsdp=(shape.kind == "train"))
+    grad_sh = None
+    if shape.kind == "train":
+        from repro.launch.steps import abstract_params
+        from repro.models import build_model
+        params_struct = abstract_params(build_model(cfg))
+        grad_sh = shd.tree_shardings(params_struct, mesh, cfg, policy)
+    bundle = input_specs(cfg, shape, grad_shardings=grad_sh)
+    in_sh = _shardings_for(bundle, mesh, cfg, policy)
+    from repro import sharding_ctx as sctx
+    with mesh, sctx.activate(sctx.from_mesh(mesh)):
+        compiled = jax.jit(bundle.fn, in_shardings=in_sh).lower(*bundle.arg_specs).compile()
+    text = compiled.as_text()
+    with open("/tmp/qwen_hlo.txt", "w") as f:
+        f.write(text)
+    comps = H.split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+
+    def walk(comp, depth=0, seen=frozenset()):
+        if comp not in comps or depth > 12 or comp in seen:
+            return
+        seen = seen | {comp}
+        n_coll = {}
+        for line in comps[comp]:
+            cm = H._COLLECTIVE_LINE.search(line)
+            if cm:
+                n_coll[cm.group(2)] = n_coll.get(cm.group(2), 0) + 1
+        if n_coll:
+            print("  " * depth + f"[{comp[:60]}] colls={n_coll}")
+        for line in comps[comp]:
+            wm = H._WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tc = H.trip_count(comps.get(cond, []))
+                consts = []
+                for l in comps.get(cond, []):
+                    consts += H._S32_CONST.findall(l)
+                print("  " * depth + f"WHILE trip={tc:.0f} consts={consts} "
+                      f"body={body[:55]}")
+                walk(body, depth + 1, seen)
+                continue
+            fm = H._CALL_RE.search(line)
+            if fm:
+                walk(fm.group(1), depth + 1, seen)
+
+    walk(entry)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
