@@ -1,0 +1,138 @@
+"""Planned-vs-measured throughput of the streaming executor.
+
+For each workload: solve the trade-off, execute the plan as a real
+pipeline (`runtime.pipeline`), and report the plan's promised inverse
+throughput against what the pipeline sustained — as a table and as JSON
+(the CI artifact consumed by regression tooling).
+
+    PYTHONPATH=src python -m benchmarks.bench_pipeline [--json out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+
+def _jpeg_rows():
+    from repro.core import heuristic
+    from repro.core.fork_join import JPEG_CALIBRATED
+    from repro.core.stg import Selection
+    from repro.core.throughput import analyze
+    from repro.graphs import jpeg
+    from repro.runtime.pipeline import compare, execute
+
+    g = jpeg.build_stg()
+    blocks = jpeg.random_blocks(256)
+    rows = []
+    sels = {
+        "fastest": Selection.fastest(g),
+        "smallest": Selection.smallest(g),
+        "solver_v8": heuristic.min_area(g, 8, JPEG_CALIBRATED).selection,
+        "solver_v2": heuristic.min_area(g, 2, JPEG_CALIBRATED).selection,
+    }
+    for name, sel in sels.items():
+        run = execute(g, sel, {"camera": blocks}, fj=JPEG_CALIBRATED)
+        rep = compare(g, sel, run)
+        rows.append({
+            "workload": f"jpeg/{name}",
+            "path": "interpreter",
+            "v_planned": analyze(g, sel).v_app,
+            "v_measured": rep.v_app_measured,
+            "accuracy": rep.accuracy,
+            "bottleneck": rep.bottleneck_measured,
+            "fifo_stalls": rep.fifo_stalls,
+        })
+    return rows
+
+
+def _streamit_rows():
+    from repro.core import heuristic
+    from repro.core.fork_join import LITERAL
+    from repro.core.throughput import analyze
+    from repro.graphs import streamit
+    from repro.runtime.pipeline import compare, execute
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for bname, build, n_in in (("fft", streamit.build_fft, 8),
+                               ("filterbank", streamit.build_filterbank, 16),
+                               ("autocor", streamit.build_autocor, 16)):
+        g = build()
+        sel = heuristic.min_area(g, 4, LITERAL).selection
+        blocks = [rng.normal(size=n_in) for _ in range(128)]
+        run = execute(g, sel, {"src": blocks}, fj=LITERAL)
+        rep = compare(g, sel, run)
+        rows.append({
+            "workload": f"streamit/{bname}",
+            "path": "interpreter",
+            "v_planned": analyze(g, sel).v_app,
+            "v_measured": rep.v_app_measured,
+            "accuracy": rep.accuracy,
+            "bottleneck": rep.bottleneck_measured,
+            "fifo_stalls": rep.fifo_stalls,
+        })
+    return rows
+
+
+def _lm_rows():
+    import jax.numpy as jnp
+    from repro.configs.base import ShapeCfg
+    from repro.configs.tiny import CONFIG as tiny
+    from repro.core import planner
+    from repro.graphs import lm_graph
+    from repro.runtime.pipeline import LMPipeline, selection_from_plan
+
+    shape = ShapeCfg("bench_pipe", 32, 8, "train")
+    plan = planner.plan(tiny, shape, chips=16, max_tp=4)
+    stg, info = lm_graph.build_stg(tiny, shape, max_tp=4)
+    pipe = LMPipeline(tiny, stg, selection_from_plan(plan))
+    rng = np.random.default_rng(0)
+    mbs = [jnp.asarray(rng.integers(0, tiny.vocab, (2, 32)), jnp.int32)
+           for _ in range(8)]
+    pipe.run(mbs[:2])                     # warm the jit caches
+    res = pipe.run(mbs)
+    toks_per_mb = 2 * 32
+    measured_tps = res.tokens_per_s(toks_per_mb)
+    return [{
+        "workload": "lm/tiny",
+        "path": "jax",
+        "planned_tokens_per_s": plan.tokens_per_s,      # v5e roofline promise
+        "measured_tokens_per_s": measured_tps,          # this host's CPU
+        "oversubscription": res.placement.oversubscription,
+        "per_stage_us": {s.name: res.stage_inverse_us(s.name)
+                         for s in pipe.stages},
+        "note": "planned assumes HW_V5E chips; measured is host-CPU "
+                "wall clock — compare shapes, not magnitudes",
+    }]
+
+
+def run(verbose: bool = True, json_path: str | None = None) -> list[dict]:
+    rows = _jpeg_rows() + _streamit_rows() + _lm_rows()
+    if verbose:
+        for r in rows:
+            if r["path"] == "interpreter":
+                print(f"{r['workload']:24s} planned v={r['v_planned']:8.3f} "
+                      f"measured v={r['v_measured']:8.3f} "
+                      f"(x{r['accuracy']:.3f})  bottleneck={r['bottleneck']}")
+            else:
+                print(f"{r['workload']:24s} planned {r['planned_tokens_per_s']:,.0f} tok/s "
+                      f"(v5e) | measured {r['measured_tokens_per_s']:,.0f} tok/s (host)")
+        print(json.dumps(rows, indent=2))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=2)
+        if verbose:
+            print(f"wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    path = None
+    if "--json" in sys.argv:
+        i = sys.argv.index("--json") + 1
+        if i >= len(sys.argv):
+            sys.exit("usage: bench_pipeline [--json PATH]")
+        path = sys.argv[i]
+    run(verbose=True, json_path=path)

@@ -18,6 +18,7 @@ BENCHES = [
     ("compress", "bench_compress", "run"),
     ("planner", "bench_planner", "run"),
     ("roofline", "bench_roofline", "run"),
+    ("pipeline", "bench_pipeline", "run"),
 ]
 
 

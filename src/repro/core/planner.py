@@ -86,12 +86,17 @@ def _stage_plans(res: TradeoffResult) -> list[StagePlan]:
 def plan(cfg: ModelConfig, shape: ShapeCfg, *, chips: int | None = None,
          tokens_per_s: float | None = None, engine: str = "heuristic",
          hw: Hardware = HW_V5E, max_tp: int = 256, nf: int = 4,
-         mb_seqs: int | None = None, fj_iters: int = 2) -> PlanResult:
-    """Solve one trade-off mode.  Exactly one of chips / tokens_per_s."""
+         mb_seqs: int | None = None, fj_iters: int = 2,
+         ii_scale: dict[str, float] | None = None) -> PlanResult:
+    """Solve one trade-off mode.  Exactly one of chips / tokens_per_s.
+
+    ``ii_scale``: per-stage measured/analytic inverse-throughput ratios
+    from an executed pipeline (runtime.pipeline.measure) — the solver then
+    sizes the plan to measured stage behaviour."""
     if (chips is None) == (tokens_per_s is None):
         raise ValueError("pass exactly one of chips= / tokens_per_s=")
     stg, info = lm_graph.build_stg(cfg, shape, hw=hw, max_tp=max_tp,
-                                   mb_seqs=mb_seqs)
+                                   mb_seqs=mb_seqs, ii_scale=ii_scale)
     eng = {"ilp": ilp, "heuristic": heuristic}[engine]
 
     if tokens_per_s is not None:
@@ -216,13 +221,20 @@ def folded_tokens_per_s(cfg: ModelConfig, shape: ShapeCfg, *, chips: int,
 
 
 def replan(cfg: ModelConfig, shape: ShapeCfg, old: PlanResult, *,
-           new_chips: int, engine: str = "heuristic", **kw) -> tuple[PlanResult, dict]:
+           new_chips: int, engine: str = "heuristic",
+           measured_ratio: dict[str, float] | None = None,
+           **kw) -> tuple[PlanResult, dict]:
     """Elastic rescale: re-solve for a new chip budget; diff vs old plan.
 
     This is the paper's core motivation ("scaling a program to a larger or
     smaller processor array requires manually re-programming all objects
-    and channels" — here it is one solver call)."""
-    new = plan(cfg, shape, chips=new_chips, engine=engine, **kw)
+    and channels" — here it is one solver call).
+
+    ``measured_ratio``: measured/analytic per-stage ratios from an executed
+    pipeline (PipelineReport.ratios()); when given, the re-solve runs on
+    the measurement-calibrated graph (measurement-guided re-planning)."""
+    new = plan(cfg, shape, chips=new_chips, engine=engine,
+               ii_scale=measured_ratio, **kw)
     changed = []
     old_by = {s.name: s for s in old.stages}
     for s in new.stages:

@@ -14,6 +14,7 @@ Feedback cycles are rejected (the paper handles feed-forward STGs only).
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field, replace
 from fractions import Fraction
@@ -171,16 +172,20 @@ class STG:
         return [n for n in self.nodes if not self.out_channels(n)]
 
     def topo_order(self) -> list[str]:
+        # Heap-ordered Kahn: the order is the lexicographically-smallest
+        # topological sort, independent of node-insertion order, so plans
+        # and simulations are reproducible across graph constructions.
         indeg = {n: len(self.in_channels(n)) for n in self.nodes}
-        ready = sorted([n for n, d in indeg.items() if d == 0])
+        ready = [n for n, d in indeg.items() if d == 0]
+        heapq.heapify(ready)
         order: list[str] = []
         while ready:
-            n = ready.pop(0)
+            n = heapq.heappop(ready)
             order.append(n)
             for c in self.out_channels(n):
                 indeg[c.dst] -= 1
                 if indeg[c.dst] == 0:
-                    ready.append(c.dst)
+                    heapq.heappush(ready, c.dst)
         if len(order) != len(self.nodes):
             raise ValueError("STG has feedback (cycle); the tool handles feed-forward graphs only")
         return order
@@ -258,6 +263,18 @@ class Selection:
     @classmethod
     def smallest(cls, stg: STG) -> "Selection":
         return cls({n: (stg.nodes[n].smallest().name, 1) for n in stg.nodes})
+
+
+def scale_impls(impls: Sequence[Impl], ratio: float,
+                floor: float = 0.05) -> tuple[Impl, ...]:
+    """Scale an implementation library's IIs (and latencies) by a measured
+    /analytic throughput ratio — the single calibration rule shared by
+    measurement-guided re-planning (runtime.pipeline.measure.calibrate and
+    graphs.lm_graph.build_stg(ii_scale=...)).  ``floor`` guards against a
+    noisy measurement collapsing an II toward zero."""
+    r = max(floor, float(ratio))
+    return tuple(replace(im, ii=im.ii * r, latency=(im.latency or im.ii) * r)
+                 for im in impls)
 
 
 def unit_rate_node(name: str, impls: Sequence[Impl], n_in: int = 1, n_out: int = 1,

@@ -32,7 +32,7 @@ from dataclasses import dataclass, replace
 from ..analysis.roofline import HW_V5E, Hardware
 from ..configs.base import ModelConfig, ShapeCfg
 from ..core.fork_join import ForkJoinModel
-from ..core.stg import STG, Channel, Impl, Node
+from ..core.stg import STG, Channel, Impl, Node, scale_impls
 
 BF16 = 2
 F32 = 4
@@ -260,13 +260,28 @@ def tpu_fork_join(act_bytes: float, v_tgt_us: float, *,
 
 
 def build_stg(cfg: ModelConfig, shape: ShapeCfg, *, hw: Hardware = HW_V5E,
-              max_tp: int = 256, mb_seqs: int | None = None) -> tuple[STG, dict]:
-    """The LM streaming task graph with per-node implementation libraries."""
+              max_tp: int = 256, mb_seqs: int | None = None,
+              ii_scale: dict[str, float] | None = None) -> tuple[STG, dict]:
+    """The LM streaming task graph with per-node implementation libraries.
+
+    ``ii_scale`` multiplies each named stage's implementation IIs — the
+    measurement-feedback hook: runtime.pipeline reports measured/analytic
+    ratios per stage, and replanning on the scaled graph sizes replica
+    counts to *measured* behaviour instead of the roofline promise.
+    """
     stages, info = stage_costs(cfg, shape, mb_seqs=mb_seqs)
+    if ii_scale:
+        unknown = set(ii_scale) - {st.name for st in stages}
+        if unknown:
+            raise ValueError(
+                f"ii_scale names unknown stages {sorted(unknown)}; a typo'd "
+                f"or regrouped key would silently skip calibration")
     g = STG()
     prev = None
     for st in stages:
         impls = impl_library(st, hw=hw, train=info["train"], max_tp=max_tp)
+        if ii_scale and st.name in ii_scale:
+            impls = scale_impls(impls, ii_scale[st.name])
         g.add_node(Node(name=st.name, impls=tuple(impls)))
         if prev is not None:
             g.connect(prev, st.name)

@@ -49,3 +49,22 @@ def mesh_device_count(mesh) -> int:
     for s in mesh.devices.shape:
         n *= s
     return n
+
+
+def stage_device_slices(mesh_or_devices, stg, sel) -> dict:
+    """Partition a mesh's device set into per-stage replica slices.
+
+    The spatial alternative to the folded (data, model) layout: each stage
+    of the plan gets tp-sized device tuples, one per replica, in topological
+    order (runtime.pipeline pins stage params to these).  Accepts a jax
+    Mesh or any device sequence.  Heterogeneous per-stage *sub-mesh*
+    construction (sharding within a slice) is an open item — see ROADMAP.
+    """
+    from ..runtime.pipeline.placement import place
+    devs = (list(mesh_or_devices.devices.flat)
+            if hasattr(mesh_or_devices, "devices") else list(mesh_or_devices))
+    pl = place(stg, sel, devs)
+    out: dict = {}
+    for sl in pl.slices.values():
+        out.setdefault(sl.stage, []).append((sl.replica, sl.devices))
+    return {k: [d for _, d in sorted(v)] for k, v in out.items()}

@@ -1,6 +1,7 @@
+from . import pipeline
 from .failures import FailureInjector, SimulatedNodeFailure
 from .straggler import StragglerMonitor
 from .trainer import TrainLoopConfig, run_resilient, train_loop
 
 __all__ = ["FailureInjector", "SimulatedNodeFailure", "StragglerMonitor",
-           "TrainLoopConfig", "run_resilient", "train_loop"]
+           "TrainLoopConfig", "run_resilient", "train_loop", "pipeline"]

@@ -1,0 +1,114 @@
+"""Bounded, double-buffered FIFO channels with backpressure.
+
+The KPN simulator (`core/simulate.py`) uses unbounded FIFOs — fine for
+functional validation, wrong for execution: real inter-stage buffers hold a
+couple of rate-blocks (double buffering: the consumer drains block ``i``
+while the producer fills ``i+1``), and a full buffer *stalls the producer*
+(backpressure).  The streaming executor uses these channels, so a plan
+whose stage rates are mismatched shows the stall where it would really
+happen instead of growing a queue without bound.
+
+Tokens are timestamped with their *visibility* time (producer firing time +
+implementation latency); capacity is counted in rate-blocks of the
+consumer's port rate.  Stall/occupancy counters feed the measurement layer.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class FifoStats:
+    pushes: int = 0
+    pops: int = 0
+    producer_stalls: int = 0      # firings deferred because the fifo was full
+    high_water: int = 0           # max tokens resident
+
+
+class Fifo:
+    """Bounded FIFO of (token, ready_time) with block-granular accounting.
+
+    ``block`` is the consumer's port rate (tokens consumed per firing);
+    ``capacity_blocks`` defaults to 2 — double buffering.
+    """
+
+    def __init__(self, block: int = 1, capacity_blocks: int = 2,
+                 min_capacity: int = 0):
+        """``min_capacity`` floors the token capacity — rate-changing
+        channels need room for the *producer's* burst (out_rate tokens per
+        firing), which can exceed consumer-block sizing."""
+        if block < 1 or capacity_blocks < 1:
+            raise ValueError(f"bad fifo shape: block={block} "
+                             f"capacity_blocks={capacity_blocks}")
+        self.block = block
+        self.capacity = max(block * capacity_blocks, min_capacity)
+        self._q: deque = deque()
+        self.stats = FifoStats()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def free(self) -> int:
+        return self.capacity - len(self._q)
+
+    def can_push(self, n: int) -> bool:
+        return self.free >= n
+
+    def push(self, tokens, ready_time: float) -> None:
+        if not self.can_push(len(tokens)):
+            raise OverflowError(
+                f"fifo overflow: pushing {len(tokens)} into {self.free} free "
+                f"slots — producer fired without space (backpressure bug)")
+        for t in tokens:
+            self._q.append((t, ready_time))
+        self.stats.pushes += len(tokens)
+        self.stats.high_water = max(self.stats.high_water, len(self._q))
+
+    def can_pop(self, n: int | None = None) -> bool:
+        return len(self._q) >= (self.block if n is None else n)
+
+    def ready_time(self, n: int | None = None) -> float | None:
+        """Visibility time of the n-th oldest token (None if not present)."""
+        n = self.block if n is None else n
+        if len(self._q) < n:
+            return None
+        return max(self._q[i][1] for i in range(n))
+
+    def pop(self, n: int | None = None) -> list:
+        n = self.block if n is None else n
+        if len(self._q) < n:
+            raise IndexError(f"fifo underflow: want {n}, have {len(self._q)}")
+        self.stats.pops += n
+        return [self._q.popleft()[0] for _ in range(n)]
+
+    def note_stall(self) -> None:
+        self.stats.producer_stalls += 1
+
+
+@dataclass
+class ChannelSet:
+    """All fifos of one materialised graph, keyed by Channel.key()."""
+    fifos: dict[tuple, Fifo] = field(default_factory=dict)
+
+    @classmethod
+    def for_graph(cls, stg, capacity_blocks: int = 2) -> "ChannelSet":
+        cs = cls()
+        for ch in stg.channels:
+            block = stg.nodes[ch.dst].in_rates[ch.dst_port]
+            out_rate = stg.nodes[ch.src].out_rates[ch.src_port]
+            cs.fifos[ch.key()] = Fifo(
+                block=max(1, block), capacity_blocks=capacity_blocks,
+                # multirate: hold capacity_blocks bursts of the larger side
+                min_capacity=max(1, out_rate) * capacity_blocks)
+        return cs
+
+    def __getitem__(self, key: tuple) -> Fifo:
+        return self.fifos[key]
+
+    def total_stalls(self) -> int:
+        return sum(f.stats.producer_stalls for f in self.fifos.values())
+
+    def occupancy(self) -> dict[tuple, int]:
+        return {k: f.stats.high_water for k, f in self.fifos.items()}

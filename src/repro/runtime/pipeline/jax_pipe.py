@@ -1,0 +1,351 @@
+"""Jax device-to-device pipeline for LM streaming task graphs.
+
+Executes the planner's LM stage graph (`graphs/lm_graph.build_stg`: embed
+-> block00.. -> head) as a real microbatch pipeline over jax devices:
+every stage's parameters live on its placement slice, activations move
+between slices with ``jax.device_put`` (device-to-device when the pool has
+distinct devices; a no-op on a single-device pool, which then time-shares
+— the placement layer reports the oversubscription), microbatches are
+dispatched to stage replicas round-robin (the fork/join routing of
+`core/transform.py` collapsed to its end-to-end effect), and execution
+follows a 1F1B schedule for train shapes or fill-drain streaming for
+serving.  Stage bodies are built from `models/blocks.py`.
+
+Inter-stage buffers are the same bounded double-buffered FIFOs as the
+interpreter path (`channels.Fifo`): a stage whose output buffer is full
+skips its turn (backpressure), and activations cross devices at
+*consumption* time, so the FIFO models the wire buffer.  Per-stage wall
+time is recorded around ``block_until_ready`` so the measurement layer can
+report measured inverse throughput per stage and tokens/s against the
+plan's promise.
+
+Measurement caveat: the host loop runs every op to completion on one
+thread, so a stage's replicas execute *serially* — ``stage_inverse_us``
+is per-replica time, while the analytic plan's v is ii/nr assuming
+concurrent replicas.  Don't feed jax-path ratios of replicated stages
+into ``planner.replan(measured_ratio=...)`` unscaled; the interpreter
+path models replica interleaving correctly and is the calibration
+source of truth (threaded/async replica execution is a ROADMAP item).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import ModelConfig
+from ...core.stg import STG, Selection
+from ...models import blocks
+from ...models.common import KeyGen, dense_init, rmsnorm
+from .channels import Fifo
+from .placement import Placement, place
+from .schedule import fill_drain, one_f_one_b
+
+
+def selection_from_plan(plan) -> Selection:
+    """PlanResult -> Selection over the lm_graph node names."""
+    sel = Selection()
+    for sp in plan.stages:
+        sel.set(sp.name, sp.impl, sp.replicas)
+    return sel
+
+
+# ===========================================================================
+# stage construction (models/blocks)
+# ===========================================================================
+@dataclass
+class LMStage:
+    name: str
+    fwd: object                  # jitted (params, x) -> y
+    params: dict                 # replica index -> pytree on that device
+    devices: list                # replica index -> jax.Device
+
+
+def _embed_fwd(cfg: ModelConfig):
+    def fwd(p, tokens):
+        return p["emb"][tokens].astype(jnp.bfloat16)
+    return fwd
+
+
+def _block_fwd(cfg: ModelConfig, mixers: tuple[tuple[str, str], ...]):
+    def fwd(p, x):
+        B, S, _ = x.shape
+        positions = jnp.arange(S)[None, :].repeat(B, axis=0)
+        for li, (mixer, mlp) in enumerate(mixers):
+            lp = p[f"l{li}"]
+            if mixer == "attn":
+                x = blocks.attn_forward(lp["mix"], cfg, x, positions)
+            else:
+                x = blocks.mamba_forward(lp["mix"], cfg, x)
+            if mlp == "moe":
+                x = blocks.moe_forward(lp["mlp"], cfg, x)
+            else:
+                x = blocks.mlp_forward(lp["mlp"], cfg, x)
+        return x
+    return fwd
+
+
+def _head_fwd(cfg: ModelConfig):
+    def fwd(p, x):
+        h = rmsnorm(x, p["norm"], cfg.norm_eps)
+        return (h @ p["w_out"].astype(h.dtype)).astype(jnp.float32)
+    return fwd
+
+
+def build_lm_stages(cfg: ModelConfig, *, layers_per_stage: int | None = None,
+                    seed: int = 0) -> tuple[list[str], dict, dict]:
+    """(stage names, fwd fns, init params) for embed / block groups / head.
+
+    ``layers_per_stage`` groups adjacent layers into one pipeline stage
+    (1 == the lm_graph granularity: one node per block).
+    """
+    kg = KeyGen(jax.random.PRNGKey(seed))
+    dt = jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16
+    d = cfg.d_model
+    pattern = cfg.block_pattern * (cfg.n_layers // len(cfg.block_pattern))
+    lps = layers_per_stage or 1
+
+    names, fwds, params = [], {}, {}
+    names.append("embed")
+    fwds["embed"] = _embed_fwd(cfg)
+    params["embed"] = {"emb": dense_init(kg("emb"), (cfg.padded_vocab, d), dt)}
+
+    for s0 in range(0, len(pattern), lps):
+        mixers = tuple(pattern[s0:s0 + lps])
+        name = f"block{s0 // lps:02d}"
+        p = {}
+        for li, (mixer, mlp) in enumerate(mixers):
+            mix_p = (blocks.init_attn(kg, cfg, f"{name}.l{li}.mix")
+                     if mixer == "attn"
+                     else blocks.init_mamba(kg, cfg, f"{name}.l{li}.mix"))
+            mlp_p = (blocks.init_moe(kg, cfg, f"{name}.l{li}.mlp")
+                     if mlp == "moe"
+                     else blocks.init_mlp(kg, cfg, f"{name}.l{li}.mlp"))
+            p[f"l{li}"] = {"mix": mix_p, "mlp": mlp_p}
+        names.append(name)
+        fwds[name] = _block_fwd(cfg, mixers)
+        params[name] = p
+
+    names.append("head")
+    fwds["head"] = _head_fwd(cfg)
+    params["head"] = {"norm": jnp.ones((d,), jnp.float32),
+                      "w_out": dense_init(kg("w_out"), (d, cfg.padded_vocab), dt)}
+    return names, fwds, params
+
+
+# ===========================================================================
+# pipeline assembly + execution
+# ===========================================================================
+@dataclass
+class LMPipelineResult:
+    outputs: list                           # microbatch logits (serve runs;
+                                            # train runs release them at B
+                                            # and fill ``losses`` instead)
+    losses: dict = field(default_factory=dict)    # mb -> loss value (train)
+    stage_seconds: dict[str, float] = field(default_factory=dict)
+    stage_firings: dict[str, int] = field(default_factory=dict)
+    mb_done_s: list[float] = field(default_factory=list)
+    wall_s: float = 0.0
+    placement: Placement | None = None
+    grads: dict | None = None               # stage -> pytree (train runs)
+
+    def stage_inverse_us(self, name: str) -> float:
+        """Mean host microseconds per firing of one stage.  NOTE: replicas
+        run serially on the host thread, so for a replicated stage this is
+        per-replica time — not directly comparable to the plan's ii/nr."""
+        n = self.stage_firings.get(name, 0)
+        return self.stage_seconds[name] / n * 1e6 if n else float("nan")
+
+    def tokens_per_s(self, toks_per_mb: int) -> float:
+        """Steady-state tokens/s from inter-microbatch completion gaps."""
+        if len(self.mb_done_s) >= 3:
+            k = max(1, len(self.mb_done_s) // 4)
+            window = self.mb_done_s[k:]
+            if len(window) >= 2 and window[-1] > window[0]:
+                return toks_per_mb * (len(window) - 1) / (window[-1] - window[0])
+        return toks_per_mb * len(self.mb_done_s) / max(self.wall_s, 1e-9)
+
+
+class LMPipeline:
+    """A placed, compiled LM pipeline ready to stream microbatches."""
+
+    def __init__(self, cfg: ModelConfig, stg: STG, sel: Selection, *,
+                 devices=None, layers_per_stage: int | None = None,
+                 capacity_blocks: int = 2, seed: int = 0):
+        self.cfg = cfg
+        devices = list(devices if devices is not None else jax.devices())
+        names, fwds, init_params = build_lm_stages(
+            cfg, layers_per_stage=layers_per_stage, seed=seed)
+        self.placement = place(stg, sel, devices)
+        # map lm_graph node names onto built stages: embed/head by name,
+        # blockNN graph nodes collapse onto the built group that owns them
+        # (topological, not lexicographic: block100 sorts before block11)
+        graph_blocks = [n for n in stg.topo_order()
+                        if n not in ("embed", "head")]
+        built_blocks = [n for n in names if n not in ("embed", "head")]
+        lps = layers_per_stage or 1
+        self.stages: list[LMStage] = []
+        for name in names:
+            if name in ("embed", "head"):
+                owners = [name]
+            else:
+                # built stage i holds layers [i*lps, (i+1)*lps) — slice the
+                # per-layer graph nodes with the same arithmetic (floor
+                # division over-counts when lps does not divide n_layers)
+                i = built_blocks.index(name)
+                owners = (graph_blocks[i * lps:(i + 1) * lps]
+                          or [graph_blocks[-1]])
+                picks = {sel.choices[o] for o in owners}
+                if len(picks) > 1:
+                    raise ValueError(
+                        f"stage {name} groups graph nodes {owners} whose "
+                        f"plan choices differ ({sorted(picks)}) — the "
+                        f"executor would drop replicas the plan promised; "
+                        f"use layers_per_stage=1 or align the plan")
+            # a fused stage does the work of all its owners' graph nodes;
+            # use every owner's replica slices (nr x n_owners copies, each
+            # doing n_owners layers of work -> same planned capacity) so
+            # the plan's device budget is not silently idled
+            devs = []
+            for owner in owners:
+                for sl in self.placement.replicas_of(owner):
+                    d = sl.devices[0]
+                    devs.append(d if not isinstance(d, int)
+                                else devices[d % len(devices)])
+            devs = devs or [devices[0]]
+            reps = {k: jax.device_put(init_params[name], devs[k])
+                    for k in range(len(devs))}
+            self.stages.append(LMStage(name=name, fwd=jax.jit(fwds[name]),
+                                       params=reps, devices=devs))
+        self.capacity_blocks = capacity_blocks
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    def reference(self, microbatches: list) -> list:
+        """Unpipelined forward — the same stage fns applied in sequence on
+        replica 0; the pipelined run must match this bitwise on CPU."""
+        outs = []
+        for mb in microbatches:
+            x = mb
+            for st in self.stages:
+                x = st.fwd(st.params[0], jax.device_put(x, st.devices[0]))
+            outs.append(x)
+        return outs
+
+    def run(self, microbatches: list, *, train: bool = False,
+            loss_fn=None) -> LMPipelineResult:
+        """Stream microbatches through the pipeline.
+
+        Serving (train=False): fill-drain streaming with bounded
+        inter-stage buffers — a stage whose output fifo is full skips its
+        turn until the consumer drains it.  Training (train=True): 1F1B
+        with per-stage vjp backward and grad accumulation;
+        ``loss_fn(logits) -> scalar`` seeds the backward (defaults to
+        sum-of-logits).
+
+        Both F and B ops reach each stage in microbatch order, so each
+        inter-stage fifo's head is always the next scheduled microbatch —
+        consumers pop the head directly, no reordering map needed.
+        """
+        n_micro = len(microbatches)
+        S = self.n_stages
+        sched = one_f_one_b(S, n_micro) if train else fill_drain(S, n_micro)
+        pos = [0] * S                              # next op index per stage
+        acts = [Fifo(block=1, capacity_blocks=self.capacity_blocks)
+                for _ in range(S - 1)]             # s -> s+1 activations
+        grds = [Fifo(block=1, capacity_blocks=self.capacity_blocks)
+                for _ in range(S - 1)] if train else None
+        vjps: list[dict[int, object]] = [dict() for _ in range(S)]
+        res = LMPipelineResult(outputs=[None] * n_micro,
+                               placement=self.placement)
+        for st in self.stages:
+            res.stage_seconds[st.name] = 0.0
+            res.stage_firings[st.name] = 0
+        grads = {st.name: None for st in self.stages} if train else None
+
+        def ready(s: int) -> bool:
+            if pos[s] >= len(sched[s]):
+                return False
+            kind, mb = sched[s][pos[s]]
+            if kind == "F":
+                if s > 0 and not acts[s - 1].can_pop(1):
+                    return False
+                if s < S - 1 and not acts[s].can_push(1):
+                    return False              # backpressure: skip this turn
+            else:
+                if s < S - 1 and not grds[s].can_pop(1):
+                    return False
+                if s > 0 and not grds[s - 1].can_push(1):
+                    return False
+            return True
+
+        t0 = time.perf_counter()
+        pending = sum(len(ops) for ops in sched)
+        while pending:
+            progressed = False
+            # downstream-first: consumers drain fifos before producers push
+            for s in reversed(range(S)):
+                if not ready(s):
+                    continue
+                kind, mb = sched[s][pos[s]]
+                st = self.stages[s]
+                rep = mb % len(st.devices)
+                tic = time.perf_counter()
+                if kind == "F":
+                    if s == 0:
+                        x = microbatches[mb]
+                    else:
+                        mb_got, x = acts[s - 1].pop(1)[0]
+                        assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
+                    x = jax.device_put(x, st.devices[rep])
+                    if train:
+                        y, vjp = jax.vjp(st.fwd, st.params[rep], x)
+                        vjps[s][mb] = vjp
+                    else:
+                        y = st.fwd(st.params[rep], x)
+                    y = jax.block_until_ready(y)
+                    if s < S - 1:
+                        acts[s].push([(mb, y)], 0.0)
+                    else:
+                        res.outputs[mb] = y
+                        res.mb_done_s.append(time.perf_counter() - t0)
+                else:
+                    if s == S - 1:
+                        logits = res.outputs[mb]
+                        if loss_fn:
+                            lval, y_bar = jax.value_and_grad(loss_fn)(logits)
+                            res.losses[mb] = float(lval)
+                        else:
+                            y_bar = jnp.ones_like(logits)
+                        # release the vocab-sized tensor: 1F1B exists to
+                        # bound live activations, so don't hoard logits
+                        res.outputs[mb] = None
+                    else:
+                        mb_got, y_bar = grds[s].pop(1)[0]
+                        assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
+                    vjp = vjps[s].pop(mb)
+                    p_bar, x_bar = vjp(jax.device_put(y_bar, st.devices[rep]))
+                    jax.block_until_ready(x_bar)
+                    # accumulate on replica 0's device — p_bar is committed
+                    # to whichever replica ran the microbatch
+                    p_bar = jax.device_put(p_bar, st.devices[0])
+                    grads[st.name] = (p_bar if grads[st.name] is None else
+                                      jax.tree.map(jnp.add, grads[st.name], p_bar))
+                    if s > 0:
+                        grds[s - 1].push([(mb, x_bar)], 0.0)
+                res.stage_seconds[st.name] += time.perf_counter() - tic
+                res.stage_firings[st.name] += 1
+                pos[s] += 1
+                pending -= 1
+                progressed = True
+            if not progressed:
+                raise RuntimeError(
+                    f"pipeline deadlock: pos={pos} of "
+                    f"{[len(o) for o in sched]} — schedule/backpressure bug")
+        res.wall_s = time.perf_counter() - t0
+        res.grads = grads
+        return res

@@ -1,0 +1,165 @@
+"""Measurement layer: measured vs analytic throughput, and replan feedback.
+
+Closes the paper's loop: the solver promises an application inverse
+throughput (Eq. 1/5/6 via `core/throughput.analyze`); the executor
+(`interpreter.py` / `jax_pipe.py`) measures what the pipeline actually
+sustains.  ``compare()`` lines the two up per stage; ``calibrate()`` scales
+each node's implementation library by its measured/analytic ratio; and
+``measured_replan()`` re-runs the solver on the calibrated graph — the
+measurement-guided re-planning step that turns a one-shot analytic plan
+into a feedback loop (plan -> run -> measure -> replan).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+from ...core import heuristic, ilp
+from ...core.fork_join import LITERAL, ForkJoinModel
+from ...core.stg import SINK, SOURCE, STG, Node, Selection, scale_impls
+from ...core.throughput import analyze
+from .interpreter import PipelineRun
+
+
+@dataclass
+class StageMeasurement:
+    stage: str
+    analytic_v: float          # cycles/firing the model predicts (II / nr)
+    measured_v: float          # cycles/firing the pipeline sustained
+    replicas: int
+    utilization: float
+
+    @property
+    def ratio(self) -> float:
+        return self.measured_v / self.analytic_v if self.analytic_v > 0 else 1.0
+
+
+@dataclass
+class PipelineReport:
+    stages: dict[str, StageMeasurement] = field(default_factory=dict)
+    v_app_analytic: float = 0.0    # cycles per graph iteration, model
+    v_app_measured: float = 0.0    # cycles per graph iteration, executed
+    bottleneck_analytic: str | None = None
+    bottleneck_measured: str | None = None
+    fifo_stalls: int = 0
+    oversubscription: float = 1.0
+
+    @property
+    def accuracy(self) -> float:
+        """measured / analytic application inverse throughput (1.0 = the
+        pipeline delivers exactly what the model promised)."""
+        return (self.v_app_measured / self.v_app_analytic
+                if self.v_app_analytic > 0 else float("nan"))
+
+    def ratios(self) -> dict[str, float]:
+        return {s.stage: s.ratio for s in self.stages.values()}
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "v_app_analytic": self.v_app_analytic,
+            "v_app_measured": self.v_app_measured,
+            "accuracy": self.accuracy,
+            "bottleneck_analytic": self.bottleneck_analytic,
+            "bottleneck_measured": self.bottleneck_measured,
+            "fifo_stalls": self.fifo_stalls,
+            "oversubscription": self.oversubscription,
+            "stages": {n: {"analytic_v": m.analytic_v,
+                           "measured_v": m.measured_v,
+                           "ratio": m.ratio,
+                           "replicas": m.replicas,
+                           "utilization": m.utilization}
+                       for n, m in self.stages.items()},
+        }, indent=2)
+
+    def summary(self) -> str:
+        rows = [f"  {m.stage}: model {m.analytic_v:.3g} vs measured "
+                f"{m.measured_v:.3g} cyc/firing (x{m.ratio:.2f}), "
+                f"util {m.utilization:.0%}"
+                for m in sorted(self.stages.values(), key=lambda m: -m.ratio)]
+        return (f"pipeline: v_app measured {self.v_app_measured:.3g} vs model "
+                f"{self.v_app_analytic:.3g} ({self.accuracy:.2f}x), "
+                f"bottleneck {self.bottleneck_measured} "
+                f"(model said {self.bottleneck_analytic}), "
+                f"{self.fifo_stalls} fifo stalls\n" + "\n".join(rows))
+
+
+def compare(stg: STG, sel: Selection, run: PipelineRun,
+            warmup_frac: float = 0.25) -> PipelineReport:
+    """Per-stage measured-vs-analytic report for one executed pipeline.
+
+    ``stg``/``sel`` are the *logical* graph and selection the plan was made
+    for; ``run`` is the executor's result on the materialised graph.
+    """
+    a = analyze(stg, sel)
+    q = stg.repetition_vector()
+    rep = PipelineReport(
+        v_app_analytic=a.v_app,
+        bottleneck_analytic=a.bottleneck,
+        fifo_stalls=run.channels.total_stalls() if run.channels else 0,
+        oversubscription=(run.placement.oversubscription
+                          if run.placement else 1.0))
+    worst_v, worst_stage = 0.0, None
+    for name in stg.nodes:
+        workers = run.replica_map.get(name, [name])
+        nr = sel.replicas(name)
+        impl = sel.impl_of(stg, name)
+        try:
+            measured = run.stage_inverse_throughput(name, warmup_frac)
+        except (ValueError, KeyError):
+            continue            # too few firings to call steady state
+        util = (sum(run.utilization(w) for w in workers) / len(workers)
+                if workers else 0.0)
+        m = StageMeasurement(stage=name, analytic_v=impl.ii / nr,
+                             measured_v=measured, replicas=nr,
+                             utilization=util)
+        rep.stages[name] = m
+        # normalise to graph iterations for the app-level number
+        v_iter = measured * q[name]
+        if v_iter > worst_v:
+            worst_v, worst_stage = v_iter, name
+    if worst_stage is None:
+        raise ValueError(
+            "no stage reached steady state (every stage fired < 4 times) — "
+            "stream more tokens before measuring")
+    rep.v_app_measured = worst_v
+    rep.bottleneck_measured = worst_stage
+    return rep
+
+
+def calibrate(stg: STG, ratios: dict[str, float],
+              floor: float = 0.05) -> STG:
+    """A copy of ``stg`` whose implementation IIs are scaled per node by the
+    measured/analytic ratio — the graph the re-planner should solve."""
+    g = STG()
+    for name, node in stg.nodes.items():
+        impls = scale_impls(node.impls, ratios.get(name, 1.0), floor)
+        g.add_node(Node(name=name, impls=impls, in_rates=node.in_rates,
+                        out_rates=node.out_rates, kind=node.kind,
+                        fn=node.fn, init_state=node.init_state))
+    for ch in stg.channels:
+        g.add_channel(ch)
+    return g
+
+
+def measured_replan(stg: STG, report: PipelineReport, *,
+                    v_tgt: float | None = None,
+                    area_budget: float | None = None,
+                    fj: ForkJoinModel = LITERAL, engine: str = "heuristic"):
+    """Re-solve the trade-off on the measurement-calibrated graph.
+
+    Exactly one of ``v_tgt`` (min-area mode) / ``area_budget``
+    (max-throughput mode).  Returns the engine's TradeoffResult whose
+    selection reflects *measured* stage behaviour — e.g. a stage that ran
+    2x slower than modelled gets proportionally more replicas.
+    """
+    if (v_tgt is None) == (area_budget is None):
+        raise ValueError("pass exactly one of v_tgt= / area_budget=")
+    eng = {"ilp": ilp, "heuristic": heuristic}[engine]
+    # sources/sinks fire at the app rate, not their (pseudo, ~0-II) impl
+    # rate — their measured/analytic ratio is meaningless noise, drop it
+    ratios = {n: r for n, r in report.ratios().items()
+              if stg.nodes[n].kind not in (SOURCE, SINK)}
+    g = calibrate(stg, ratios)
+    if v_tgt is not None:
+        return eng.min_area(g, v_tgt, fj)
+    return eng.max_throughput(g, area_budget, fj)

@@ -1,0 +1,51 @@
+"""Microbatch pipeline schedules (GPipe fill-drain and 1F1B).
+
+A schedule is, per pipeline stage, the ordered list of operations the
+stage executes: ``("F", mb)`` forward of microbatch ``mb``, ``("B", mb)``
+backward.  1F1B (PipeDream-flush) bounds in-flight activations per stage to
+``n_stages - stage`` by interleaving one backward after each forward once
+warmed up — the schedule the jax executor follows for train-shaped runs;
+forward-only (serving) runs use the degenerate fill-drain stream.
+"""
+from __future__ import annotations
+
+Op = tuple[str, int]
+
+
+def fill_drain(n_stages: int, n_micro: int) -> list[list[Op]]:
+    """GPipe-style: all forwards, then (if trained) all backwards — the
+    forward half is exactly the streaming order, so serving uses this."""
+    return [[("F", mb) for mb in range(n_micro)] for _ in range(n_stages)]
+
+
+def one_f_one_b(n_stages: int, n_micro: int) -> list[list[Op]]:
+    """1F1B: stage s runs ``min(n_stages - s, n_micro)`` warmup forwards,
+    then alternates B/F in steady state, then drains remaining backwards.
+
+    Invariants (asserted in tests): every stage sees each microbatch's F
+    before its B; stage s never holds more than ``n_stages - s`` live
+    activations; the last stage strictly alternates F,B,F,B,...
+    """
+    if n_stages < 1 or n_micro < 1:
+        raise ValueError(f"bad schedule shape {n_stages}x{n_micro}")
+    out: list[list[Op]] = []
+    for s in range(n_stages):
+        warmup = min(n_stages - s, n_micro)
+        ops: list[Op] = [("F", mb) for mb in range(warmup)]
+        nf, nb = warmup, 0
+        # steady state: one B then one F while forwards remain
+        while nf < n_micro:
+            ops.append(("B", nb)); nb += 1
+            ops.append(("F", nf)); nf += 1
+        while nb < n_micro:
+            ops.append(("B", nb)); nb += 1
+        out.append(ops)
+    return out
+
+
+def max_live_activations(ops: list[Op]) -> int:
+    live = peak = 0
+    for kind, _ in ops:
+        live += 1 if kind == "F" else -1
+        peak = max(peak, live)
+    return peak

@@ -1,0 +1,177 @@
+"""Degenerate hypothesis fallback for clean environments.
+
+When the real ``hypothesis`` package is unavailable, ``conftest.py``
+installs this module under ``sys.modules["hypothesis"]`` so test modules
+importing ``from hypothesis import given, settings`` still collect and run.
+
+``@given`` becomes a deterministic sampler: each strategy draws a fixed,
+seeded pseudo-random stream of examples (seeded by the test's qualified
+name), so the suite exercises a spread of inputs and failures reproduce
+bit-for-bit.  This is NOT property-based testing — no shrinking, no
+coverage-guided search — just enough fixed examples to keep the invariant
+tests meaningful.  Install ``requirements-dev.txt`` for the real thing.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 12
+_MAX_EXAMPLES_CAP = 25        # keep the degenerate path fast
+
+
+class SearchStrategy:
+    """Base strategy: ``sample(rng)`` draws one example."""
+
+    def sample(self, rng: random.Random):
+        raise NotImplementedError
+
+    # hypothesis API surface some tests touch
+    def example(self):
+        return self.sample(random.Random(0))
+
+    def map(self, f):
+        return _Mapped(self, f)
+
+    def filter(self, pred, _tries: int = 100):
+        return _Filtered(self, pred, _tries)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, f):
+        self.base, self.f = base, f
+
+    def sample(self, rng):
+        return self.f(self.base.sample(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred, tries):
+        self.base, self.pred, self.tries = base, pred, tries
+
+    def sample(self, rng):
+        for _ in range(self.tries):
+            x = self.base.sample(rng)
+            if self.pred(x):
+                return x
+        raise ValueError("filter predicate never satisfied")
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(1 << 16) if min_value is None else min_value
+        self.hi = (1 << 16) if max_value is None else max_value
+
+    def sample(self, rng):
+        # bias toward the boundaries — they are where invariants break
+        r = rng.random()
+        if r < 0.15:
+            return self.lo
+        if r < 0.3:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+        self.lo = 0.0 if min_value is None else min_value
+        self.hi = 1.0 if max_value is None else max_value
+
+    def sample(self, rng):
+        return self.lo + (self.hi - self.lo) * rng.random()
+
+
+class _Booleans(SearchStrategy):
+    def sample(self, rng):
+        return rng.random() < 0.5
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def sample(self, rng):
+        return self.value
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def sample(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None, **_kw):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = min_size + 10 if max_size is None else max_size
+
+    def sample(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.sample(rng) for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *elements):
+        self.elements = elements
+
+    def sample(self, rng):
+        return tuple(e.sample(rng) for e in self.elements)
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def sample(self, rng):
+        return rng.choice(self.strategies).sample(rng)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper(*fixture_args, **fixture_kwargs):
+            n = min(getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_EXAMPLES), _MAX_EXAMPLES_CAP)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                args = tuple(s.sample(rng) for s in arg_strategies)
+                kwargs = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*fixture_args, *args, **fixture_kwargs, **kwargs)
+        # NOT functools.wraps: copying __wrapped__/__signature__ would make
+        # pytest unwrap to ``fn`` and treat its sampled params as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = _Integers
+strategies.floats = _Floats
+strategies.booleans = _Booleans
+strategies.just = _Just
+strategies.sampled_from = _SampledFrom
+strategies.lists = _Lists
+strategies.tuples = _Tuples
+strategies.one_of = _OneOf
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` in ``sys.modules``."""
+    mod = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", mod)
+    sys.modules.setdefault("hypothesis.strategies", strategies)
