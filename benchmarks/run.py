@@ -2,9 +2,18 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table2 roofline
+    PYTHONPATH=src python -m benchmarks.run pipeline --json-dir artifacts
+
+``--json-dir DIR`` writes each bench's rows to ``DIR/BENCH_<name>.json``
+(benches whose runners return rows / accept ``json_path``).  CI uploads
+the directory as an artifact so the perf trajectory accumulates run over
+run instead of living only in job logs.
 """
 from __future__ import annotations
 
+import inspect
+import json
+import os
 import sys
 import time
 
@@ -22,8 +31,39 @@ BENCHES = [
 ]
 
 
+def _invoke(fn, name: str, json_dir: str | None):
+    """Run one bench; route rows to BENCH_<name>.json when a dir is set."""
+    kwargs = {"verbose": True}
+    json_path = (os.path.join(json_dir, f"BENCH_{name}.json")
+                 if json_dir else None)
+    if json_path and "json_path" in inspect.signature(fn).parameters:
+        kwargs["json_path"] = json_path
+        json_path = None                   # the bench writes it itself
+    out = fn(**kwargs)
+    if json_path and out is not None:
+        try:
+            # serialise fully before touching the file so a mid-stream
+            # TypeError cannot leave a truncated artifact for CI to upload
+            payload = json.dumps(out, indent=2, default=str)
+        except TypeError as e:
+            print(f"skipping {json_path}: return value not "
+                  f"JSON-serialisable ({e})")
+            return
+        with open(json_path, "w") as f:
+            f.write(payload)
+        print(f"wrote {json_path}")
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
+    json_dir = None
+    if "--json-dir" in argv:
+        i = argv.index("--json-dir")
+        if i + 1 >= len(argv):
+            raise SystemExit("usage: benchmarks.run [names...] --json-dir DIR")
+        json_dir = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+        os.makedirs(json_dir, exist_ok=True)
     wanted = set(argv) if argv else None
     failures = []
     for name, mod_name, fn_name in BENCHES:
@@ -36,7 +76,7 @@ def main(argv=None) -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=[fn_name])
-            getattr(mod, fn_name)(verbose=True)
+            _invoke(getattr(mod, fn_name), name, json_dir)
             print(f"[{name}: {time.perf_counter()-t0:.1f}s]")
         except Exception as e:
             failures.append((name, repr(e)))

@@ -57,14 +57,55 @@ def stage_device_slices(mesh_or_devices, stg, sel) -> dict:
     The spatial alternative to the folded (data, model) layout: each stage
     of the plan gets tp-sized device tuples, one per replica, in topological
     order (runtime.pipeline pins stage params to these).  Accepts a jax
-    Mesh or any device sequence.  Heterogeneous per-stage *sub-mesh*
-    construction (sharding within a slice) is an open item — see ROADMAP.
+    Mesh or any device sequence.  ``stage_submeshes`` lifts the same
+    partition to per-replica jax sub-meshes for tp-sharded stage params.
     """
     from ..runtime.pipeline.placement import place
-    devs = (list(mesh_or_devices.devices.flat)
-            if hasattr(mesh_or_devices, "devices") else list(mesh_or_devices))
+    devs = _pool(mesh_or_devices)
     pl = place(stg, sel, devs)
     out: dict = {}
     for sl in pl.slices.values():
         out.setdefault(sl.stage, []).append((sl.replica, sl.devices))
     return {k: [d for _, d in sorted(v)] for k, v in out.items()}
+
+
+def stage_submeshes(mesh_or_devices, stg, sel) -> dict:
+    """Per-stage, per-replica ("data", "model") sub-meshes of shape (1, tp).
+
+    The heterogeneous-mesh half of the spatial layout: each tp>1 replica
+    slice becomes its own 1 x tp mesh so the stage's params shard over the
+    slice (`launch/sharding.stage_param_specs`) instead of living on the
+    slice's first device.  Entries are ``None`` where a sub-mesh cannot be
+    built honestly: tp == 1 (nothing to shard) or a slice folded onto
+    repeated devices by oversubscription (a mesh with duplicate devices is
+    invalid — the executor falls back to single-device placement there).
+    """
+    from ..runtime.pipeline.placement import place
+    devs = _pool(mesh_or_devices)
+    pl = place(stg, sel, devs)
+    out: dict = {}
+    for sl in pl.slices.values():
+        out.setdefault(sl.stage, []).append(
+            (sl.replica, submesh_of(sl.resolve(devs))))
+    return {k: [m for _, m in sorted(v, key=lambda t: t[0])]
+            for k, v in out.items()}
+
+
+def submesh_of(devices):
+    """A (1, tp) ("data", "model") Mesh over one replica's device tuple, or
+    None when no honest sub-mesh exists: tp == 1 (nothing to shard),
+    repeated devices (a slice folded by oversubscription), or abstract
+    integer handles (the interpreter's device model)."""
+    import numpy as np
+    if len(devices) < 2 or len(set(devices)) != len(devices):
+        return None
+    if not all(hasattr(d, "platform") for d in devices):
+        return None
+    return jax.sharding.Mesh(
+        np.asarray(devices, dtype=object).reshape(1, len(devices)),
+        ("data", "model"))
+
+
+def _pool(mesh_or_devices) -> list:
+    return (list(mesh_or_devices.devices.flat)
+            if hasattr(mesh_or_devices, "devices") else list(mesh_or_devices))

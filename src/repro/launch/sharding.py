@@ -110,6 +110,41 @@ def param_spec(path: str, shape, mesh, cfg: ModelConfig,
     return spec(*([None] * len(body)))           # norms, scalars: replicate
 
 
+def stage_param_specs(stage: str, tree, mesh, cfg: ModelConfig,
+                      policy: ShardingPolicy | None = None):
+    """Spec tree for one *pipeline stage's* param pytree over its sub-mesh.
+
+    The spatial executor (`runtime/pipeline/jax_pipe.py`) keeps per-stage
+    param trees whose leaves reuse the block naming this module's rules key
+    off (wq/wo/w_up/...), plus two stage-local outliers: the embed stage's
+    table is "emb" (the (V, D) embedding rule) and the head stage's
+    projection is "w_out", which would otherwise hit the mamba row-parallel
+    rule — as the (D, V) unembedding it takes the "head" rule instead.
+    FSDP defaults off: a stage sub-mesh's "data" axis has size 1 (the
+    replica dimension is spatial, not a mesh axis), so there is nothing to
+    ZeRO-shard within a slice.
+    """
+    policy = policy or ShardingPolicy(fsdp=False, tp=True)
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        name = p.rsplit("/", 1)[-1]
+        if stage == "embed" and name == "emb":
+            p = "embed"
+        elif stage == "head" and name == "w_out":
+            p = "head"
+        return param_spec(p, leaf.shape, mesh, cfg, policy)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def stage_param_shardings(stage: str, tree, mesh, cfg: ModelConfig,
+                          policy: ShardingPolicy | None = None):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        stage_param_specs(stage, tree, mesh, cfg, policy))
+
+
 def tree_pspecs(tree, mesh, cfg: ModelConfig, policy: ShardingPolicy):
     """Spec tree for a params-like pytree (from jax.eval_shape)."""
     def leaf_spec(path, leaf):

@@ -3,29 +3,34 @@
 Three layers (see README §runtime/pipeline):
 
   placement   — partition the device set into per-stage slices sized
-                tp x replicas, round-robin fork/join routing
-  channels    — bounded double-buffered FIFOs with backpressure
+                tp x replicas, round-robin fork/join routing, per-stage
+                sub-meshes for tp-sharded stage params
+  channels    — bounded two-level (host queue + on-device staging) FIFOs
+                with backpressure; capacity bounds in-flight work
   execution   — `interpreter` (host/numpy, any functional STG) and
-                `jax_pipe` (device-to-device LM pipeline, 1F1B schedule)
-  measurement — `measure.compare` lines measured steady-state inverse
-                throughput up against `core/throughput.analyze`;
-                `measure.measured_replan` feeds it back into the solver
+                `jax_pipe` (device-to-device LM pipeline, overlapped
+                async dispatch, 1F1B schedule)
+  measurement — `measure.compare` / `measure.compare_lm` line measured
+                steady-state inverse throughput up against
+                `core/throughput.analyze`; `measure.measured_replan`
+                feeds it back into the solver
 """
 from .channels import ChannelSet, Fifo, FifoStats
 from .interpreter import PipelineRun, execute, execute_materialized
 from .jax_pipe import (LMPipeline, LMPipelineResult, build_lm_stages,
                        selection_from_plan)
 from .measure import (PipelineReport, StageMeasurement, calibrate, compare,
-                      measured_replan)
+                      compare_lm, measured_replan)
 from .placement import Placement, StageSlice, place, tp_of
-from .schedule import fill_drain, max_live_activations, one_f_one_b
+from .schedule import (fill_drain, fill_drain_bubble, max_live_activations,
+                       one_f_one_b)
 
 __all__ = [
     "ChannelSet", "Fifo", "FifoStats",
     "PipelineRun", "execute", "execute_materialized",
     "LMPipeline", "LMPipelineResult", "build_lm_stages", "selection_from_plan",
     "PipelineReport", "StageMeasurement", "calibrate", "compare",
-    "measured_replan",
+    "compare_lm", "measured_replan",
     "Placement", "StageSlice", "place", "tp_of",
-    "fill_drain", "max_live_activations", "one_f_one_b",
+    "fill_drain", "fill_drain_bubble", "max_live_activations", "one_f_one_b",
 ]

@@ -1,4 +1,4 @@
-"""Bounded, double-buffered FIFO channels with backpressure.
+"""Bounded FIFO channels: host queue + on-device staging, with backpressure.
 
 The KPN simulator (`core/simulate.py`) uses unbounded FIFOs — fine for
 functional validation, wrong for execution: real inter-stage buffers hold a
@@ -8,9 +8,31 @@ while the producer fills ``i+1``), and a full buffer *stalls the producer*
 whose stage rates are mismatched shows the stall where it would really
 happen instead of growing a queue without bound.
 
+Two-level buffering (the async jax path):
+
+  * **host level** — the bounded queue itself.  Under asynchronous
+    dispatch a slot is occupied from the moment the producer's op is
+    *dispatched* until the consumer's op that ate the token *completes* on
+    device: ``reserve()`` claims a slot at producer dispatch,
+    ``push_reserved()`` fills it, ``pop_hold()`` hands the token to the
+    consumer while keeping the slot occupied, and ``release()`` frees it at
+    consumer retirement.  Capacity therefore bounds total in-flight work
+    (queued + executing) per edge — device memory cannot grow without
+    bound no matter how far ahead the host runs.
+  * **device level** — an optional ``prefetch_fn`` stages the first
+    ``prefetch_depth`` queued tokens onto the consumer's device slice as
+    soon as they are enqueued (an async ``device_put``), so the transfer
+    overlaps the consumer's current microbatch instead of serialising with
+    its next one.
+
+The synchronous interpreter path uses the plain ``push``/``pop`` subset,
+where dispatch and completion coincide and the two levels collapse to the
+old double-buffered FIFO semantics.
+
 Tokens are timestamped with their *visibility* time (producer firing time +
 implementation latency); capacity is counted in rate-blocks of the
-consumer's port rate.  Stall/occupancy counters feed the measurement layer.
+consumer's port rate.  Stall/occupancy/prefetch counters feed the
+measurement layer.
 """
 from __future__ import annotations
 
@@ -23,18 +45,24 @@ class FifoStats:
     pushes: int = 0
     pops: int = 0
     producer_stalls: int = 0      # firings deferred because the fifo was full
-    high_water: int = 0           # max tokens resident
+    high_water: int = 0           # max tokens resident in the host queue
+    inflight_high_water: int = 0  # max slots occupied incl. reserved + held
+    prefetches: int = 0           # tokens staged on device ahead of pop
 
 
 class Fifo:
     """Bounded FIFO of (token, ready_time) with block-granular accounting.
 
     ``block`` is the consumer's port rate (tokens consumed per firing);
-    ``capacity_blocks`` defaults to 2 — double buffering.
+    ``capacity_blocks`` defaults to 2 — double buffering.  ``prefetch_fn``
+    (token -> token), when set, is applied to at most ``prefetch_depth``
+    tokens at the head of the queue ahead of their pop — the jax path uses
+    it to issue the consumer-side device transfer early.
     """
 
     def __init__(self, block: int = 1, capacity_blocks: int = 2,
-                 min_capacity: int = 0):
+                 min_capacity: int = 0, prefetch_fn=None,
+                 prefetch_depth: int = 1):
         """``min_capacity`` floors the token capacity — rate-changing
         channels need room for the *producer's* burst (out_rate tokens per
         firing), which can exceed consumer-block sizing."""
@@ -43,29 +71,66 @@ class Fifo:
                              f"capacity_blocks={capacity_blocks}")
         self.block = block
         self.capacity = max(block * capacity_blocks, min_capacity)
+        self.prefetch_fn = prefetch_fn
+        self.prefetch_depth = max(0, prefetch_depth)
         self._q: deque = deque()
+        self._reserved = 0        # slots claimed by dispatched producers
+        self._held = 0            # slots kept by executing consumers
+        self._prefetched = 0      # head tokens already staged on device
         self.stats = FifoStats()
 
     def __len__(self) -> int:
         return len(self._q)
 
     @property
+    def inflight_slots(self) -> int:
+        """Slots occupied beyond the queue itself (producer-reserved +
+        consumer-held) — the device-side in-flight work on this edge."""
+        return self._reserved + self._held
+
+    @property
     def free(self) -> int:
-        return self.capacity - len(self._q)
+        return self.capacity - len(self._q) - self._reserved - self._held
 
     def can_push(self, n: int) -> bool:
         return self.free >= n
+
+    # -- producer side ------------------------------------------------------
+    def reserve(self, n: int) -> None:
+        """Claim ``n`` slots at producer *dispatch* time (async path); fill
+        them with ``push_reserved`` when the tokens materialise."""
+        if not self.can_push(n):
+            raise OverflowError(
+                f"fifo overflow: reserving {n} of {self.free} free slots — "
+                f"producer dispatched without space (backpressure bug)")
+        self._reserved += n
+        self._note_inflight()
+
+    def push_reserved(self, tokens, ready_time: float) -> None:
+        """Fill previously reserved slots (completion of an async push)."""
+        if len(tokens) > self._reserved:
+            raise OverflowError(
+                f"push_reserved of {len(tokens)} exceeds {self._reserved} "
+                f"reserved slots")
+        self._reserved -= len(tokens)
+        self._append(tokens, ready_time)
 
     def push(self, tokens, ready_time: float) -> None:
         if not self.can_push(len(tokens)):
             raise OverflowError(
                 f"fifo overflow: pushing {len(tokens)} into {self.free} free "
                 f"slots — producer fired without space (backpressure bug)")
+        self._append(tokens, ready_time)
+
+    def _append(self, tokens, ready_time: float) -> None:
         for t in tokens:
             self._q.append((t, ready_time))
         self.stats.pushes += len(tokens)
         self.stats.high_water = max(self.stats.high_water, len(self._q))
+        self._note_inflight()
+        self._maybe_prefetch()
 
+    # -- consumer side ------------------------------------------------------
     def can_pop(self, n: int | None = None) -> bool:
         return len(self._q) >= (self.block if n is None else n)
 
@@ -81,10 +146,45 @@ class Fifo:
         if len(self._q) < n:
             raise IndexError(f"fifo underflow: want {n}, have {len(self._q)}")
         self.stats.pops += n
-        return [self._q.popleft()[0] for _ in range(n)]
+        self._prefetched = max(0, self._prefetched - n)
+        out = [self._q.popleft()[0] for _ in range(n)]
+        self._maybe_prefetch()
+        return out
+
+    def pop_hold(self, n: int | None = None) -> list:
+        """Pop tokens but keep their slots occupied until ``release`` —
+        the consumer's op is dispatched but not yet complete, so the edge's
+        in-flight budget still owns this work."""
+        n = self.block if n is None else n
+        out = self.pop(n)
+        self._held += n
+        self._note_inflight()
+        return out
+
+    def release(self, n: int) -> None:
+        """Free slots held by ``pop_hold`` (consumer op retired)."""
+        if n > self._held:
+            raise ValueError(f"release of {n} exceeds {self._held} held slots")
+        self._held -= n
+        self._maybe_prefetch()
 
     def note_stall(self) -> None:
         self.stats.producer_stalls += 1
+
+    # -- device staging ------------------------------------------------------
+    def _maybe_prefetch(self) -> None:
+        if self.prefetch_fn is None:
+            return
+        while self._prefetched < min(len(self._q), self.prefetch_depth):
+            tok, t = self._q[self._prefetched]
+            self._q[self._prefetched] = (self.prefetch_fn(tok), t)
+            self._prefetched += 1
+            self.stats.prefetches += 1
+
+    def _note_inflight(self) -> None:
+        occ = len(self._q) + self._reserved + self._held
+        self.stats.inflight_high_water = max(
+            self.stats.inflight_high_water, occ)
 
 
 @dataclass

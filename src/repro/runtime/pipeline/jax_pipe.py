@@ -2,41 +2,60 @@
 
 Executes the planner's LM stage graph (`graphs/lm_graph.build_stg`: embed
 -> block00.. -> head) as a real microbatch pipeline over jax devices:
-every stage's parameters live on its placement slice, activations move
-between slices with ``jax.device_put`` (device-to-device when the pool has
-distinct devices; a no-op on a single-device pool, which then time-shares
-— the placement layer reports the oversubscription), microbatches are
-dispatched to stage replicas round-robin (the fork/join routing of
+every stage's parameters live on its placement slice — sharded over a
+per-stage (1, tp) sub-mesh when the slice owns tp > 1 distinct devices
+(`launch/mesh.stage_submeshes` + `launch/sharding.stage_param_specs`),
+pinned to the slice's device otherwise — activations move between slices
+with ``jax.device_put`` (device-to-device when the pool has distinct
+devices; a no-op on a single-device pool, which then time-shares — the
+placement layer reports the oversubscription), microbatches are dispatched
+to stage replicas round-robin (the fork/join routing of
 `core/transform.py` collapsed to its end-to-end effect), and execution
 follows a 1F1B schedule for train shapes or fill-drain streaming for
 serving.  Stage bodies are built from `models/blocks.py`.
 
-Inter-stage buffers are the same bounded double-buffered FIFOs as the
-interpreter path (`channels.Fifo`): a stage whose output buffer is full
-skips its turn (backpressure), and activations cross devices at
-*consumption* time, so the FIFO models the wire buffer.  Per-stage wall
-time is recorded around ``block_until_ready`` so the measurement layer can
-report measured inverse throughput per stage and tokens/s against the
-plan's promise.
+Execution is *overlapped* by default (``overlap=True``): the host loop
+never blocks on an op — each firing is handed to a small worker pool that
+dispatches the jax computation and retires it on completion, so a
+replicated stage's microbatches run concurrently across its replica
+slices (measured inverse throughput reads ii/nr, like the interpreter
+path) and the host scheduling loop itself hides inside device compute.
+Inter-stage buffers are two-level host+device FIFOs (`channels.Fifo`): a
+slot is occupied from producer *dispatch* to consumer *retirement*, so
+channel capacity bounds total in-flight work per edge (bounded device
+memory under backpressure), and queued activations are prefetched onto
+the consumer's device slice up to ``prefetch_blocks`` ahead of
+consumption — the transfer overlaps the consumer's current microbatch
+(on-device double buffering) instead of serialising with its next one.
+``overlap=False`` reproduces the legacy serial executor (dispatch, block,
+advance) for A/B measurement; `benchmarks/bench_pipeline.py` reports the
+recovered bubble.
 
-Measurement caveat: the host loop runs every op to completion on one
-thread, so a stage's replicas execute *serially* — ``stage_inverse_us``
-is per-replica time, while the analytic plan's v is ii/nr assuming
-concurrent replicas.  Don't feed jax-path ratios of replicated stages
-into ``planner.replan(measured_ratio=...)`` unscaled; the interpreter
-path models replica interleaving correctly and is the calibration
-source of truth (threaded/async replica execution is a ROADMAP item).
+Per-stage timing is sampled from completion events: each op timestamps
+the moment its output became ready, and ``stage_inverse_us`` reads the
+steady-state gap of the stage's merged completion stream — replicas
+interleave, so a replicated stage measures its *effective* inverse
+throughput, directly comparable to the plan's ii/nr.  The jax path is
+therefore a valid calibration source: feed
+``measure.compare_lm(...).ratios()`` into
+``planner.replan(measured_ratio=...)`` exactly like interpreter-path
+reports (remember measured ratios mix host-vs-roofline scale; the solver
+consumes *relative* per-stage ratios).
 """
 from __future__ import annotations
 
 import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ...configs.base import ModelConfig
 from ...core.stg import STG, Selection
+from ...launch.mesh import submesh_of
+from ...launch.sharding import ShardingPolicy, stage_param_shardings
 from ...models import blocks
 from ...models.common import KeyGen, dense_init, rmsnorm
 from .channels import Fifo
@@ -59,8 +78,26 @@ def selection_from_plan(plan) -> Selection:
 class LMStage:
     name: str
     fwd: object                  # jitted (params, x) -> y
-    params: dict                 # replica index -> pytree on that device
-    devices: list                # replica index -> jax.Device
+    params: dict                 # replica index -> pytree on that slice
+    devices: list                # replica index -> first jax.Device
+    x_shardings: list = None     # replica index -> NamedSharding (tp-sharded
+                                 # slices) or None (single-device placement)
+    meshes: list = None          # replica index -> sub-mesh or None
+
+    def x_target(self, rep: int):
+        """Where replica ``rep``'s inputs must live: the sub-mesh's
+        replicated sharding for tp-sharded slices, its device otherwise."""
+        if self.x_shardings and self.x_shardings[rep] is not None:
+            return self.x_shardings[rep]
+        return self.devices[rep]
+
+    def grad_target(self):
+        """Where accumulated grads live: replica 0's param shardings for a
+        tp-sharded stage (grads shard like their params), its device
+        otherwise."""
+        if self.meshes and self.meshes[0] is not None:
+            return jax.tree.map(lambda leaf: leaf.sharding, self.params[0])
+        return self.devices[0]
 
 
 def _embed_fwd(cfg: ModelConfig):
@@ -146,39 +183,91 @@ class LMPipelineResult:
     losses: dict = field(default_factory=dict)    # mb -> loss value (train)
     stage_seconds: dict[str, float] = field(default_factory=dict)
     stage_firings: dict[str, int] = field(default_factory=dict)
+    stage_done_s: dict[str, list[float]] = field(default_factory=dict)
     mb_done_s: list[float] = field(default_factory=list)
     wall_s: float = 0.0
     placement: Placement | None = None
     grads: dict | None = None               # stage -> pytree (train runs)
+    fifo_stats: dict = field(default_factory=dict)   # edge label -> FifoStats
+    max_inflight: int = 0                   # peak concurrently in-flight ops
+    op_trace: list = field(default_factory=list)
+    # (stage, kind, mb, replica, t_dispatch, t_done) per op, run-relative —
+    # the raw material for overlap debugging and gantt-style bench plots
 
     def stage_inverse_us(self, name: str) -> float:
-        """Mean host microseconds per firing of one stage.  NOTE: replicas
-        run serially on the host thread, so for a replicated stage this is
-        per-replica time — not directly comparable to the plan's ii/nr."""
+        """Effective microseconds per forward firing of one stage: the
+        steady-state gap of the stage's merged completion-event stream.
+        Replicas interleave under overlapped dispatch, so a replicated
+        stage reads ii/nr — directly comparable to the analytic plan (and
+        to the interpreter path's ``stage_inverse_throughput``).
+
+        Runs too short to show a steady state (< 4 forward completions)
+        fall back to mean in-flight latency per op — an
+        order-of-magnitude degraded mode that mixes forward and backward
+        ops *and* dispatch-queue wait (overlapping ops can sum past wall
+        time).  ``compare_lm`` skips such stages rather than calibrating
+        on the fallback."""
+        ts = sorted(self.stage_done_s.get(name, ()))
+        if len(ts) >= 4:
+            k = max(1, len(ts) // 4)
+            window = ts[k:]
+            if len(window) >= 2 and window[-1] > window[0]:
+                return (window[-1] - window[0]) / (len(window) - 1) * 1e6
         n = self.stage_firings.get(name, 0)
         return self.stage_seconds[name] / n * 1e6 if n else float("nan")
 
     def tokens_per_s(self, toks_per_mb: int) -> float:
-        """Steady-state tokens/s from inter-microbatch completion gaps."""
+        """Steady-state tokens/s from inter-microbatch completion gaps.
+        Short runs (< 3 completed microbatches) still exclude the pipeline
+        fill ramp by anchoring at the first completion instead of dividing
+        by the full wall clock."""
         if len(self.mb_done_s) >= 3:
             k = max(1, len(self.mb_done_s) // 4)
             window = self.mb_done_s[k:]
             if len(window) >= 2 and window[-1] > window[0]:
                 return toks_per_mb * (len(window) - 1) / (window[-1] - window[0])
+        if len(self.mb_done_s) >= 2 and self.mb_done_s[-1] > self.mb_done_s[0]:
+            span = self.mb_done_s[-1] - self.mb_done_s[0]
+            return toks_per_mb * (len(self.mb_done_s) - 1) / span
         return toks_per_mb * len(self.mb_done_s) / max(self.wall_s, 1e-9)
 
 
+@dataclass
+class _Op:
+    """One dispatched firing, in flight between dispatch and retirement."""
+    s: int
+    kind: str
+    mb: int
+    rep: int
+    t_dispatch: float
+    releases: list = field(default_factory=list)   # (fifo, n) freed at retire
+
+
 class LMPipeline:
-    """A placed, compiled LM pipeline ready to stream microbatches."""
+    """A placed, compiled LM pipeline ready to stream microbatches.
+
+    ``overlap`` selects the asynchronous executor (concurrent replica
+    dispatch + on-device prefetch; the default); ``prefetch_blocks`` is
+    how many queued activations each channel stages onto the consumer's
+    device slice ahead of consumption; ``workers`` caps the dispatch pool
+    (default: one per replica slice, at most 16).
+    """
 
     def __init__(self, cfg: ModelConfig, stg: STG, sel: Selection, *,
                  devices=None, layers_per_stage: int | None = None,
-                 capacity_blocks: int = 2, seed: int = 0):
+                 capacity_blocks: int = 2, seed: int = 0,
+                 overlap: bool = True, prefetch_blocks: int = 1,
+                 replica_queue: int = 2, workers: int | None = None,
+                 policy: ShardingPolicy | None = None):
         self.cfg = cfg
         devices = list(devices if devices is not None else jax.devices())
         names, fwds, init_params = build_lm_stages(
             cfg, layers_per_stage=layers_per_stage, seed=seed)
         self.placement = place(stg, sel, devices)
+        self.overlap = overlap
+        self.prefetch_blocks = prefetch_blocks
+        self.replica_queue = max(1, replica_queue)
+        policy = policy or ShardingPolicy(fsdp=False, tp=True)
         # map lm_graph node names onto built stages: embed/head by name,
         # blockNN graph nodes collapse onto the built group that owns them
         # (topological, not lexicographic: block100 sorts before block11)
@@ -186,6 +275,18 @@ class LMPipeline:
                         if n not in ("embed", "head")]
         built_blocks = [n for n in names if n not in ("embed", "head")]
         lps = layers_per_stage or 1
+        # every graph node must land in exactly one built stage, or the
+        # pipeline would silently run less model than the plan placed
+        # (e.g. enc-dec graphs emit encNN nodes no decoder stage claims)
+        if len(graph_blocks) != sum(
+                len(graph_blocks[i * lps:(i + 1) * lps])
+                for i in range(len(built_blocks))) or not all(
+                n.startswith("block") for n in graph_blocks):
+            raise ValueError(
+                f"graph nodes {graph_blocks} do not map 1:1 onto the "
+                f"{len(built_blocks)} built decoder stages x "
+                f"{lps} layer(s): LMPipeline executes embed->blocks->head "
+                f"only (encoder/decoder pipelines are a ROADMAP item)")
         self.stages: list[LMStage] = []
         for name in names:
             if name in ("embed", "head"):
@@ -195,8 +296,11 @@ class LMPipeline:
                 # per-layer graph nodes with the same arithmetic (floor
                 # division over-counts when lps does not divide n_layers)
                 i = built_blocks.index(name)
-                owners = (graph_blocks[i * lps:(i + 1) * lps]
-                          or [graph_blocks[-1]])
+                owners = graph_blocks[i * lps:(i + 1) * lps]
+                if not owners:
+                    raise ValueError(
+                        f"stage {name}: no graph nodes map to it — the "
+                        f"graph/built-stage invariant above broke")
                 picks = {sel.choices[o] for o in owners}
                 if len(picks) > 1:
                     raise ValueError(
@@ -208,22 +312,41 @@ class LMPipeline:
             # use every owner's replica slices (nr x n_owners copies, each
             # doing n_owners layers of work -> same planned capacity) so
             # the plan's device budget is not silently idled
-            devs = []
-            for owner in owners:
-                for sl in self.placement.replicas_of(owner):
-                    d = sl.devices[0]
-                    devs.append(d if not isinstance(d, int)
-                                else devices[d % len(devices)])
-            devs = devs or [devices[0]]
-            reps = {k: jax.device_put(init_params[name], devs[k])
-                    for k in range(len(devs))}
+            slices = [sl for owner in owners
+                      for sl in self.placement.replicas_of(owner)]
+            devs, meshes, x_shs, reps = [], [], [], {}
+            for k, sl in enumerate(slices):
+                handles = sl.resolve(devices)
+                mesh = submesh_of(handles)
+                devs.append(handles[0])
+                meshes.append(mesh)
+                if mesh is not None:
+                    # tp > 1 on distinct devices: shard the stage's params
+                    # over its slice instead of parking them on handles[0]
+                    sh = stage_param_shardings(name, init_params[name],
+                                               mesh, cfg, policy)
+                    reps[k] = jax.device_put(init_params[name], sh)
+                    x_shs.append(NamedSharding(mesh, P()))
+                else:
+                    reps[k] = jax.device_put(init_params[name], handles[0])
+                    x_shs.append(None)
+            if not devs:
+                devs, meshes, x_shs = [devices[0]], [None], [None]
+                reps = {0: jax.device_put(init_params[name], devices[0])}
             self.stages.append(LMStage(name=name, fwd=jax.jit(fwds[name]),
-                                       params=reps, devices=devs))
+                                       params=reps, devices=devs,
+                                       x_shardings=x_shs, meshes=meshes))
         self.capacity_blocks = capacity_blocks
+        self.workers = workers
 
     @property
     def n_stages(self) -> int:
         return len(self.stages)
+
+    def _n_workers(self) -> int:
+        if self.workers is not None:
+            return max(1, self.workers)
+        return min(16, max(2, sum(len(st.devices) for st in self.stages)))
 
     def reference(self, microbatches: list) -> list:
         """Unpipelined forward — the same stage fns applied in sequence on
@@ -232,12 +355,12 @@ class LMPipeline:
         for mb in microbatches:
             x = mb
             for st in self.stages:
-                x = st.fwd(st.params[0], jax.device_put(x, st.devices[0]))
+                x = st.fwd(st.params[0], jax.device_put(x, st.x_target(0)))
             outs.append(x)
         return outs
 
     def run(self, microbatches: list, *, train: bool = False,
-            loss_fn=None) -> LMPipelineResult:
+            loss_fn=None, overlap: bool | None = None) -> LMPipelineResult:
         """Stream microbatches through the pipeline.
 
         Serving (train=False): fill-drain streaming with bounded
@@ -245,107 +368,254 @@ class LMPipeline:
         turn until the consumer drains it.  Training (train=True): 1F1B
         with per-stage vjp backward and grad accumulation;
         ``loss_fn(logits) -> scalar`` seeds the backward (defaults to
-        sum-of-logits).
+        sum-of-logits).  ``overlap`` overrides the pipeline-level knob for
+        this run (the benchmark's A/B switch).
 
         Both F and B ops reach each stage in microbatch order, so each
         inter-stage fifo's head is always the next scheduled microbatch —
         consumers pop the head directly, no reordering map needed.
         """
+        overlap = self.overlap if overlap is None else overlap
         n_micro = len(microbatches)
         S = self.n_stages
         sched = one_f_one_b(S, n_micro) if train else fill_drain(S, n_micro)
         pos = [0] * S                              # next op index per stage
-        acts = [Fifo(block=1, capacity_blocks=self.capacity_blocks)
-                for _ in range(S - 1)]             # s -> s+1 activations
-        grds = [Fifo(block=1, capacity_blocks=self.capacity_blocks)
-                for _ in range(S - 1)] if train else None
+
+        def _staging(consumer: LMStage):
+            nrep = len(consumer.devices)
+
+            def fn(tok):
+                mb, y = tok
+                return (mb, jax.device_put(y, consumer.x_target(mb % nrep)))
+            return fn
+
+        def _edge_fifo(producer: LMStage, consumer: LMStage) -> Fifo:
+            # a slot is occupied from producer *dispatch* (reservation) to
+            # consumer *retirement* (hold release), so both endpoints' full
+            # in-flight complements must fit alongside the buffered tokens:
+            # nr x replica_queue reservations on the producer side (else a
+            # replicated producer serialises its own replicas on output
+            # slots), nr x replica_queue holds on the consumer side, plus
+            # ``capacity_blocks`` actually-queued tokens of slack between
+            # them — the knob keeps its double-buffering meaning
+            slots = (len(producer.devices) + len(consumer.devices)) \
+                * self.replica_queue
+            return Fifo(block=1, capacity_blocks=self.capacity_blocks,
+                        min_capacity=self.capacity_blocks + slots,
+                        prefetch_fn=_staging(consumer) if overlap else None,
+                        prefetch_depth=self.prefetch_blocks
+                        * len(consumer.devices) * self.replica_queue)
+
+        acts = [_edge_fifo(self.stages[s], self.stages[s + 1])
+                for s in range(S - 1)]             # s -> s+1 activations
+        grds = [_edge_fifo(self.stages[s + 1], self.stages[s])
+                for s in range(S - 1)] if train else None
         vjps: list[dict[int, object]] = [dict() for _ in range(S)]
         res = LMPipelineResult(outputs=[None] * n_micro,
                                placement=self.placement)
         for st in self.stages:
             res.stage_seconds[st.name] = 0.0
             res.stage_firings[st.name] = 0
+            res.stage_done_s[st.name] = []
         grads = {st.name: None for st in self.stages} if train else None
+        # deterministic grad accumulation: p_bars fold in microbatch order
+        # regardless of which replica retires first
+        acc_next = [0] * S
+        acc_buf: list[dict[int, object]] = [dict() for _ in range(S)]
+        raw_losses: dict[int, object] = {}
+
+        # Completion events arrive out of order (concurrent replicas), but
+        # each edge's consumer pops in microbatch order — stage the pushes
+        # through a per-edge reorder buffer so the fifo stays mb-sorted.
+        # Slots were reserved at dispatch, so deferred pushes cannot
+        # overflow.
+        reorder: dict[int, tuple[dict, list]] = {}
+
+        def ordered_push(fifo: Fifo, mb: int, tok, t_done: float) -> None:
+            pend, nxt = reorder.setdefault(id(fifo), ({}, [0]))
+            pend[mb] = (tok, t_done)
+            while nxt[0] in pend:
+                tok_i, t_i = pend.pop(nxt[0])
+                fifo.push_reserved([(nxt[0], tok_i)], t_i)
+                nxt[0] += 1
 
         def ready(s: int) -> bool:
+            """Can stage s's next scheduled op be dispatched now?  Counts a
+            producer stall the first time a given op is deferred purely by
+            output-buffer backpressure."""
             if pos[s] >= len(sched[s]):
                 return False
             kind, mb = sched[s][pos[s]]
+            # a replica is one worker with a short device queue: at most
+            # ``replica_queue`` ops in flight.  Depth 1 = strict serial
+            # worker (firings space at the service interval — the cleanest
+            # ii/nr measurement); depth 2 (default) keeps the next firing
+            # queued behind the current one so host dispatch gaps hide
+            # inside device compute.
+            if busy[s][mb % len(self.stages[s].devices)] >= self.replica_queue:
+                return False
             if kind == "F":
                 if s > 0 and not acts[s - 1].can_pop(1):
                     return False
                 if s < S - 1 and not acts[s].can_push(1):
+                    if stall_mark[s] != pos[s]:
+                        stall_mark[s] = pos[s]
+                        acts[s].note_stall()
                     return False              # backpressure: skip this turn
             else:
+                if mb not in vjps[s]:
+                    return False              # forward still in flight
                 if s < S - 1 and not grds[s].can_pop(1):
                     return False
                 if s > 0 and not grds[s - 1].can_push(1):
+                    if stall_mark[s] != pos[s]:
+                        stall_mark[s] = pos[s]
+                        grds[s - 1].note_stall()
                     return False
             return True
 
-        t0 = time.perf_counter()
-        pending = sum(len(ops) for ops in sched)
-        while pending:
-            progressed = False
-            # downstream-first: consumers drain fifos before producers push
-            for s in reversed(range(S)):
-                if not ready(s):
-                    continue
-                kind, mb = sched[s][pos[s]]
-                st = self.stages[s]
-                rep = mb % len(st.devices)
-                tic = time.perf_counter()
-                if kind == "F":
-                    if s == 0:
-                        x = microbatches[mb]
-                    else:
-                        mb_got, x = acts[s - 1].pop(1)[0]
-                        assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
-                    x = jax.device_put(x, st.devices[rep])
-                    if train:
-                        y, vjp = jax.vjp(st.fwd, st.params[rep], x)
-                        vjps[s][mb] = vjp
-                    else:
-                        y = st.fwd(st.params[rep], x)
-                    y = jax.block_until_ready(y)
-                    if s < S - 1:
-                        acts[s].push([(mb, y)], 0.0)
-                    else:
-                        res.outputs[mb] = y
-                        res.mb_done_s.append(time.perf_counter() - t0)
+        stall_mark = [-1] * S
+        busy = [[0] * len(st.devices) for st in self.stages]
+
+        # -- op bodies (run on the dispatch pool under overlap) -------------
+        def fwd_op(st: LMStage, rep: int, x):
+            x = jax.device_put(x, st.x_target(rep))
+            if train:
+                y, vjp = jax.vjp(st.fwd, st.params[rep], x)
+            else:
+                y, vjp = st.fwd(st.params[rep], x), None
+            jax.block_until_ready(y)
+            return y, vjp, time.perf_counter()
+
+        def bwd_op(st: LMStage, rep: int, vjp, y_bar, logits):
+            lval = None
+            if logits is not None:            # last stage: seed from loss
+                if loss_fn:
+                    lval, y_bar = jax.value_and_grad(loss_fn)(logits)
                 else:
-                    if s == S - 1:
-                        logits = res.outputs[mb]
-                        if loss_fn:
-                            lval, y_bar = jax.value_and_grad(loss_fn)(logits)
-                            res.losses[mb] = float(lval)
-                        else:
-                            y_bar = jnp.ones_like(logits)
-                        # release the vocab-sized tensor: 1F1B exists to
-                        # bound live activations, so don't hoard logits
-                        res.outputs[mb] = None
+                    y_bar = jnp.ones_like(logits)
+            else:
+                y_bar = jax.device_put(y_bar, st.x_target(rep))
+            p_bar, x_bar = vjp(y_bar)
+            jax.block_until_ready(x_bar)
+            return p_bar, x_bar, lval, time.perf_counter()
+
+        def dispatch(s: int):
+            kind, mb = sched[s][pos[s]]
+            st = self.stages[s]
+            rep = mb % len(st.devices)
+            op = _Op(s=s, kind=kind, mb=mb, rep=rep,
+                     t_dispatch=time.perf_counter())
+            if kind == "F":
+                if s == 0:
+                    x = microbatches[mb]
+                else:
+                    mb_got, x = acts[s - 1].pop_hold(1)[0]
+                    assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
+                    op.releases.append((acts[s - 1], 1))
+                if s < S - 1:
+                    acts[s].reserve(1)
+                task = (fwd_op, (st, rep, x))
+            else:
+                if s == S - 1:
+                    logits, y_bar = res.outputs[mb], None
+                    # release the vocab-sized tensor: 1F1B exists to
+                    # bound live activations, so don't hoard logits
+                    res.outputs[mb] = None
+                else:
+                    mb_got, y_bar = grds[s].pop_hold(1)[0]
+                    assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
+                    op.releases.append((grds[s], 1))
+                    logits = None
+                if s > 0:
+                    grds[s - 1].reserve(1)
+                task = (bwd_op, (st, rep, vjps[s].pop(mb), y_bar, logits))
+            pos[s] += 1
+            busy[s][rep] += 1
+            return op, task
+
+        def retire(op: _Op, result, t0: float):
+            st = self.stages[op.s]
+            if op.kind == "F":
+                y, vjp, t_done = result
+                if train:
+                    vjps[op.s][op.mb] = vjp
+                if op.s < S - 1:
+                    ordered_push(acts[op.s], op.mb, y, t_done)
+                else:
+                    res.outputs[op.mb] = y
+                    res.mb_done_s.append(t_done - t0)
+            else:
+                p_bar, x_bar, lval, t_done = result
+                if op.s > 0:
+                    ordered_push(grds[op.s - 1], op.mb, x_bar, t_done)
+                if lval is not None:
+                    raw_losses[op.mb] = lval
+                acc_buf[op.s][op.mb] = p_bar
+                while acc_next[op.s] in acc_buf[op.s]:
+                    pb = acc_buf[op.s].pop(acc_next[op.s])
+                    acc_next[op.s] += 1
+                    pb = jax.device_put(pb, st.grad_target())
+                    grads[st.name] = (pb if grads[st.name] is None else
+                                      jax.tree.map(jnp.add,
+                                                   grads[st.name], pb))
+            for fifo, n in op.releases:
+                fifo.release(n)
+            busy[op.s][op.rep] -= 1
+            if op.kind == "F":
+                res.stage_done_s[st.name].append(t_done - t0)
+            res.stage_seconds[st.name] += t_done - op.t_dispatch
+            res.stage_firings[st.name] += 1
+            res.op_trace.append((st.name, op.kind, op.mb, op.rep,
+                                 op.t_dispatch - t0, t_done - t0))
+
+        t0 = time.perf_counter()
+        remaining = sum(len(ops) for ops in sched)
+        inflight: dict = {}                    # future -> _Op
+        pool = ThreadPoolExecutor(max_workers=self._n_workers()) \
+            if overlap else None
+        try:
+            while remaining or inflight:
+                progressed = False
+                # downstream-first: consumers drain fifos before producers
+                for s in reversed(range(S)):
+                    if not ready(s):
+                        continue
+                    op, (fn, args) = dispatch(s)
+                    remaining -= 1
+                    progressed = True
+                    if pool is None:
+                        retire(op, fn(*args), t0)
                     else:
-                        mb_got, y_bar = grds[s].pop(1)[0]
-                        assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
-                    vjp = vjps[s].pop(mb)
-                    p_bar, x_bar = vjp(jax.device_put(y_bar, st.devices[rep]))
-                    jax.block_until_ready(x_bar)
-                    # accumulate on replica 0's device — p_bar is committed
-                    # to whichever replica ran the microbatch
-                    p_bar = jax.device_put(p_bar, st.devices[0])
-                    grads[st.name] = (p_bar if grads[st.name] is None else
-                                      jax.tree.map(jnp.add, grads[st.name], p_bar))
-                    if s > 0:
-                        grds[s - 1].push([(mb, x_bar)], 0.0)
-                res.stage_seconds[st.name] += time.perf_counter() - tic
-                res.stage_firings[st.name] += 1
-                pos[s] += 1
-                pending -= 1
-                progressed = True
-            if not progressed:
-                raise RuntimeError(
-                    f"pipeline deadlock: pos={pos} of "
-                    f"{[len(o) for o in sched]} — schedule/backpressure bug")
+                        inflight[pool.submit(fn, *args)] = op
+                        res.max_inflight = max(res.max_inflight,
+                                               len(inflight))
+                done = [f for f in inflight if f.done()]
+                if not progressed and not done and inflight:
+                    done, _ = wait(list(inflight),
+                                   return_when=FIRST_COMPLETED)
+                for f in done:
+                    retire(inflight.pop(f), f.result(), t0)
+                    progressed = True
+                if not progressed:
+                    raise RuntimeError(
+                        f"pipeline deadlock: pos={pos} of "
+                        f"{[len(o) for o in sched]} — "
+                        f"schedule/backpressure bug")
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
+        # drain the async tail before reading the wall clock
+        jax.block_until_ready([o for o in res.outputs if o is not None])
+        if grads is not None:
+            jax.block_until_ready([g for g in grads.values()
+                                   if g is not None])
+        res.losses = {mb: float(v) for mb, v in sorted(raw_losses.items())}
+        res.mb_done_s.sort()
         res.wall_s = time.perf_counter() - t0
         res.grads = grads
+        for s in range(S - 1):
+            res.fifo_stats[("act", s)] = acts[s].stats
+            if grds is not None:
+                res.fifo_stats[("grd", s)] = grds[s].stats
         return res

@@ -3,11 +3,16 @@
 Closes the paper's loop: the solver promises an application inverse
 throughput (Eq. 1/5/6 via `core/throughput.analyze`); the executor
 (`interpreter.py` / `jax_pipe.py`) measures what the pipeline actually
-sustains.  ``compare()`` lines the two up per stage; ``calibrate()`` scales
-each node's implementation library by its measured/analytic ratio; and
+sustains.  ``compare()`` (interpreter runs) and ``compare_lm()`` (jax
+runs) line the two up per stage; ``calibrate()`` scales each node's
+implementation library by its measured/analytic ratio; and
 ``measured_replan()`` re-runs the solver on the calibrated graph — the
 measurement-guided re-planning step that turns a one-shot analytic plan
-into a feedback loop (plan -> run -> measure -> replan).
+into a feedback loop (plan -> run -> measure -> replan).  Both executor
+paths are calibration sources: the overlapped jax executor dispatches a
+stage's replicas concurrently and measures completion-event streams, so
+its per-stage ratios carry the same ii/nr semantics as the interpreter's
+(`planner.replan(measured_ratio=report.ratios())` consumes either).
 """
 from __future__ import annotations
 
@@ -99,10 +104,12 @@ def compare(stg: STG, sel: Selection, run: PipelineRun,
         oversubscription=(run.placement.oversubscription
                           if run.placement else 1.0))
     worst_v, worst_stage = 0.0, None
+    firings: dict[str, int] = {}
     for name in stg.nodes:
         workers = run.replica_map.get(name, [name])
         nr = sel.replicas(name)
         impl = sel.impl_of(stg, name)
+        firings[name] = sum(len(run.fire_times.get(w, ())) for w in workers)
         try:
             measured = run.stage_inverse_throughput(name, warmup_frac)
         except (ValueError, KeyError):
@@ -118,9 +125,67 @@ def compare(stg: STG, sel: Selection, run: PipelineRun,
         if v_iter > worst_v:
             worst_v, worst_stage = v_iter, name
     if worst_stage is None:
+        counts = ", ".join(f"{n}: {c}" for n, c in sorted(firings.items()))
+        shortfall = max(4 - c for c in firings.values()) if firings else 4
         raise ValueError(
-            "no stage reached steady state (every stage fired < 4 times) — "
-            "stream more tokens before measuring")
+            f"no stage reached steady state (need >= 4 firings per stage; "
+            f"got {counts}) — stream at least {shortfall} more "
+            f"iteration(s) of tokens before measuring")
+    rep.v_app_measured = worst_v
+    rep.bottleneck_measured = worst_stage
+    return rep
+
+
+def compare_lm(stg: STG, sel: Selection, res,
+               stage_map: dict[str, str] | None = None) -> PipelineReport:
+    """Per-stage measured-vs-analytic report for one jax-path LM run.
+
+    ``res`` is an `jax_pipe.LMPipelineResult`; measured inverse throughput
+    comes from each stage's completion-event stream (replicas dispatch
+    concurrently under the overlapped executor, so a replicated stage
+    reads its effective ii/nr, same semantics as the interpreter path).
+    Analytic v is the plan's roofline ii/nr in µs — absolute magnitudes
+    differ from host wall-clock by the hardware gap, but the *relative*
+    per-stage ratios are exactly what
+    ``planner.replan(measured_ratio=report.ratios())`` consumes.
+    ``stage_map`` maps graph node -> executed stage name when stages were
+    fused (``layers_per_stage > 1``); identity by default.
+    """
+    a = analyze(stg, sel)
+    q = stg.repetition_vector()
+    rep = PipelineReport(
+        v_app_analytic=a.v_app,
+        bottleneck_analytic=a.bottleneck,
+        fifo_stalls=sum(s.producer_stalls for s in res.fifo_stats.values()),
+        oversubscription=(res.placement.oversubscription
+                          if res.placement else 1.0))
+    worst_v, worst_stage = 0.0, None
+    firings: dict[str, int] = {}
+    for name in stg.nodes:
+        node = stg.nodes[name]
+        if node.kind in (SOURCE, SINK):
+            continue
+        exec_name = (stage_map or {}).get(name, name)
+        firings[name] = len(res.stage_done_s.get(exec_name, ()))
+        measured = res.stage_inverse_us(exec_name)
+        if firings[name] < 4 or measured != measured:   # nan: never fired
+            continue
+        nr = sel.replicas(name)
+        impl = sel.impl_of(stg, name)
+        busy = res.stage_seconds.get(exec_name, 0.0)
+        util = min(1.0, busy / (res.wall_s * nr)) if res.wall_s > 0 else 0.0
+        rep.stages[name] = StageMeasurement(
+            stage=name, analytic_v=impl.ii / nr, measured_v=measured,
+            replicas=nr, utilization=util)
+        v_iter = measured * q[name]
+        if v_iter > worst_v:
+            worst_v, worst_stage = v_iter, name
+    if worst_stage is None:
+        counts = ", ".join(f"{n}: {c}" for n, c in sorted(firings.items()))
+        raise ValueError(
+            f"no stage reached steady state (need >= 4 completions per "
+            f"stage; got {counts}) — stream more microbatches before "
+            f"measuring")
     rep.v_app_measured = worst_v
     rep.bottleneck_measured = worst_stage
     return rep

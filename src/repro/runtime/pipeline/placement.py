@@ -49,6 +49,23 @@ class StageSlice:
     def chips(self) -> int:
         return self.tp
 
+    @property
+    def distinct(self) -> bool:
+        """True when the slice owns ``tp`` *different* devices — the
+        precondition for building a per-stage sub-mesh and actually
+        sharding params over the slice.  A small pool folds a tp>1 slice
+        onto repeated devices (oversubscription), where sub-mesh
+        construction is invalid and the executor falls back to
+        single-device placement."""
+        return len(set(self.devices)) == len(self.devices)
+
+    def resolve(self, pool: Sequence[Any]) -> tuple:
+        """Device handles of this slice against a concrete pool: integer
+        placements (the "enough hardware" default) index into ``pool``
+        round-robin; real handles pass through."""
+        return tuple(pool[d % len(pool)] if isinstance(d, int) else d
+                     for d in self.devices)
+
 
 @dataclass
 class Placement:

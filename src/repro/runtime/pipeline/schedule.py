@@ -43,6 +43,19 @@ def one_f_one_b(n_stages: int, n_micro: int) -> list[list[Op]]:
     return out
 
 
+def fill_drain_bubble(n_stages: int, n_micro: int) -> float:
+    """Analytic pipeline-bubble fraction of a fill-drain stream: of the
+    ``n_micro + n_stages - 1`` slot-times the last stage observes, the
+    first ``n_stages - 1`` are ramp (no output) — the idle share a
+    perfectly overlapped executor could at best recover by hiding
+    transfers and host dispatch inside compute.  The benchmark's
+    recovered-bubble column reports measured overlap-off minus overlap-on
+    wall time against this ceiling."""
+    if n_stages < 1 or n_micro < 1:
+        raise ValueError(f"bad schedule shape {n_stages}x{n_micro}")
+    return (n_stages - 1) / (n_stages - 1 + n_micro)
+
+
 def max_live_activations(ops: list[Op]) -> int:
     live = peak = 0
     for kind, _ in ops:
