@@ -28,6 +28,7 @@ BENCHES = [
     ("planner", "bench_planner", "run"),
     ("roofline", "bench_roofline", "run"),
     ("pipeline", "bench_pipeline", "run"),
+    ("serve", "bench_serve", "run"),
 ]
 
 

@@ -4,7 +4,16 @@ A reduced qwen2.5-3b serves a queue of random-prompt requests in batched
 rounds; the planner first recommends how to split a chip budget between
 replicas for the decode shape (the paper's replication = serving replicas).
 
-    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py                # single-device
+    PYTHONPATH=src python examples/serve_lm.py --pipeline     # planned STG
+
+``--pipeline`` serves the same queue through the decode pipeline: the
+planner's decode-shape plan is placed on the local device pool
+(plan -> placement -> prefill/decode stage programs -> LMServer), request
+groups stream concurrently through the stages, per-stage KV-cache slices
+stay resident on their placement slices, and sampled tokens feed back
+over a continuous token-stream channel.  Completions are token-identical
+to the single-device backend under greedy sampling.
 """
 import sys
 
@@ -15,11 +24,12 @@ import json
 import numpy as np
 
 from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeCfg
 from repro.core import planner
 from repro.runtime.server import LMServer, Request
 
 
-def main():
+def main(pipeline: bool = False):
     arch = "qwen2.5-3b"
     cfg_full = get_config(arch)
 
@@ -37,7 +47,20 @@ def main():
                                         rng.integers(4, 25)).tolist(),
                     max_new=16)
             for i in range(12)]
-    srv = LMServer(cfg, max_batch=4, temperature=0.0)
+    pipe = None
+    if pipeline:
+        from repro.graphs import lm_graph
+        from repro.runtime.pipeline import DecodePipeline
+
+        # re-plan the reduced config at pool scale, then place + compile it
+        shape = ShapeCfg("decode_smoke", 64, 16, "decode")
+        small = planner.plan(cfg, shape, chips=8, max_tp=4)
+        stg, _ = lm_graph.build_stg(cfg, shape, max_tp=4)
+        pipe = DecodePipeline(cfg, stg, small)
+        print("pipelined backend:")
+        print(pipe.placement.summary())
+        print()
+    srv = LMServer(cfg, max_batch=4, temperature=0.0, pipeline=pipe)
     outs = srv.serve(reqs)
     for c in outs[:3]:
         print(f"req {c.uid}: {c.prompt_len} prompt tok -> "
@@ -46,4 +69,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(pipeline="--pipeline" in sys.argv)

@@ -208,12 +208,25 @@ def max_throughput(stg: STG, area_budget: float, fj: ForkJoinModel = LITERAL,
     cand = sorted({q[n] * im.ii / nr
                    for n in names for im in stg.nodes[n].impls
                    for nr in nrs})
-    # cluster near-identical targets (keep the smallest of each 0.5% bucket)
-    # so the bisection+refinement below steps between materially different
-    # operating points instead of exhausting its window on duplicates
-    filtered = []
+    # cluster near-identical targets so the bisection+refinement below
+    # steps between materially different operating points instead of
+    # exhausting its window on duplicates.  Buckets are anchored at their
+    # first (smallest) member — a fixed anchor, so chains of candidates
+    # each within 0.5% of the previous cannot collapse a wide range into
+    # one point — and each bucket keeps its LARGEST member: min_area at
+    # the bucket's largest target never costs more area than at its
+    # smaller ones, and keeping the smallest would drop the global
+    # maximum — when every node's II lands in one bucket (measurement-
+    # calibrated graphs scale all IIs near-uniformly), that deleted the
+    # only operating point the all-smallest selection can reach and
+    # max_throughput came back infeasible on a fitting graph
+    filtered: list[float] = []
+    anchor = None
     for c in cand:
-        if not filtered or c > filtered[-1] * 1.005:
+        if anchor is not None and c <= anchor * 1.005:
+            filtered[-1] = c               # still this bucket: keep largest
+        else:
+            anchor = c                     # new bucket anchored here
             filtered.append(c)
     cand = filtered
     best: TradeoffResult | None = None

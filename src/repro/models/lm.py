@@ -215,25 +215,26 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16,
     return {"pos": jnp.zeros((), jnp.int32), "layers": caches}
 
 
-def prefill(cfg: ModelConfig, params, batch, *, capacity: int | None = None,
-            impl=None):
-    """Prompt pass: returns last-token logits + a decode-ready cache.
+def slice_periods(stacked, lo: int, hi: int):
+    """Periods [lo, hi) of a stacked-period pytree (params or caches).
 
-    ``capacity``: total cache length to allocate (prompt + tokens still to
-    be generated); defaults to the prompt length (no headroom).  SWA archs
-    cap it at the attention window (ring buffer)."""
-    compute_dt = dtype_of(cfg.compute_dtype)
-    enc_out = None
-    if cfg.encdec:
-        frames = sc.act(batch["frames"].astype(compute_dt), "dp", "sp", None)
-        pos_e = jnp.arange(frames.shape[1])
-        enc = _run_stack(cfg, params["enc_layers"], frames, pos_e,
-                         causal=False, impl=impl, remat="none")
-        enc_out = rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
-    x, n_prefix = _embed_inputs(cfg, params, batch, compute_dt)
+    The per-stage cache-plumbing primitive: a pipeline stage that owns a
+    contiguous run of periods slices its parameters *and* its KV/SSM
+    cache out of the stacked representation with the same arithmetic, so
+    `prefill_blocks`/`decode_blocks` run unchanged over the sub-stack —
+    the staged computation is the same scan body the whole-model path
+    compiles, just over fewer periods."""
+    return jax.tree.map(lambda leaf: leaf[lo:hi], stacked)
+
+
+def prefill_blocks(cfg: ModelConfig, stacked_params, x, positions, *,
+                   cap: int, enc_out=None, impl=None):
+    """Prompt pass over a (sub-)stack of periods: scan the prefill body
+    (attention/mamba with cache construction) over ``stacked_params``.
+    Returns (hidden, stacked per-period caches).  The whole-model
+    `prefill` is embed -> this over ``params["layers"]`` -> norm/head; a
+    pipeline block stage is this over `slice_periods` of the stack."""
     B, S, _ = x.shape
-    positions = jnp.arange(S)
-    cap = blocks.attn_cache_capacity(cfg, capacity or S)
 
     def body(h, period_params):
         period_cache = {}
@@ -291,19 +292,41 @@ def prefill(cfg: ModelConfig, params, batch, *, capacity: int | None = None,
             period_cache[f"pos{i}"] = c
         return h, period_cache
 
-    x, caches = jax.lax.scan(body, x, params["layers"])
+    return jax.lax.scan(body, x, stacked_params)
+
+
+def prefill(cfg: ModelConfig, params, batch, *, capacity: int | None = None,
+            impl=None):
+    """Prompt pass: returns last-token logits + a decode-ready cache.
+
+    ``capacity``: total cache length to allocate (prompt + tokens still to
+    be generated); defaults to the prompt length (no headroom).  SWA archs
+    cap it at the attention window (ring buffer)."""
+    compute_dt = dtype_of(cfg.compute_dtype)
+    enc_out = None
+    if cfg.encdec:
+        frames = sc.act(batch["frames"].astype(compute_dt), "dp", "sp", None)
+        pos_e = jnp.arange(frames.shape[1])
+        enc = _run_stack(cfg, params["enc_layers"], frames, pos_e,
+                         causal=False, impl=impl, remat="none")
+        enc_out = rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
+    x, n_prefix = _embed_inputs(cfg, params, batch, compute_dt)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    cap = blocks.attn_cache_capacity(cfg, capacity or S)
+    x, caches = prefill_blocks(cfg, params["layers"], x, positions, cap=cap,
+                               enc_out=enc_out, impl=impl)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = x[:, -1:] @ _head(cfg, params).astype(x.dtype)
     return logits, {"pos": jnp.asarray(S, jnp.int32), "layers": caches}
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens, *, impl=None):
-    """One token for every sequence in the batch.  tokens: (B, 1) int32."""
-    compute_dt = dtype_of(cfg.compute_dtype)
-    x = sc.act(jnp.take(params["embed"], tokens, axis=0).astype(compute_dt),
-               "dp", None, None)
-    pos = cache["pos"]
-
+def decode_blocks(cfg: ModelConfig, stacked_params, stacked_cache, x, pos, *,
+                  impl=None):
+    """One decode step over a (sub-)stack of periods: scan the decode body
+    over (params, cache) period pairs.  Returns (hidden, new caches).
+    The whole-model `decode_step` is embed -> this -> norm/head; a
+    pipeline block stage runs it over its resident cache slice."""
     def body(h, xs):
         period_params, period_cache = xs
         new_cache = {}
@@ -330,7 +353,17 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, *, impl=None):
             new_cache[f"pos{i}"] = c
         return h, new_cache
 
-    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    return jax.lax.scan(body, x, (stacked_params, stacked_cache))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *, impl=None):
+    """One token for every sequence in the batch.  tokens: (B, 1) int32."""
+    compute_dt = dtype_of(cfg.compute_dtype)
+    x = sc.act(jnp.take(params["embed"], tokens, axis=0).astype(compute_dt),
+               "dp", None, None)
+    pos = cache["pos"]
+    x, new_caches = decode_blocks(cfg, params["layers"], cache["layers"], x,
+                                  pos, impl=impl)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = x @ _head(cfg, params).astype(x.dtype)
     return logits, {"pos": pos + 1, "layers": new_caches}

@@ -1,36 +1,79 @@
 """Spatial streaming executor: run planned STGs as real pipelines.
 
-Three layers (see README §runtime/pipeline):
+Layers (see README §runtime/pipeline):
 
   placement   — partition the device set into per-stage slices sized
                 tp x replicas, round-robin fork/join routing, per-stage
                 sub-meshes for tp-sharded stage params
   channels    — bounded two-level (host queue + on-device staging) FIFOs
-                with backpressure; capacity bounds in-flight work
-  execution   — `interpreter` (host/numpy, any functional STG) and
-                `jax_pipe` (device-to-device LM pipeline, overlapped
-                async dispatch, 1F1B schedule)
+                with backpressure; capacity bounds in-flight work;
+                `StreamChannel` adds open-ended token streams (decode
+                feedback traffic)
+  engine      — the graph-generic executor core: one wall-clock
+                asynchronous scheduler (`Engine` + `StageProgram`) and one
+                virtual-clock discrete-event loop (`run_event_loop` +
+                `EventProgram`), owning FIFO credits, reorder buffers,
+                replica busy budgets, completion timing, and deadlock
+                detection for every backend
+  backends    — `interpreter` (host/numpy, any functional STG),
+                `jax_pipe` (device-to-device LM microbatch pipeline,
+                overlapped async dispatch, 1F1B), and `decode`
+                (prefill/decode serving with per-stage KV-cache residency
+                and a token feedback stream)
   measurement — `measure.compare` / `measure.compare_lm` line measured
                 steady-state inverse throughput up against
-                `core/throughput.analyze`; `measure.measured_replan`
-                feeds it back into the solver
+                `core/throughput.analyze` through one shared report
+                builder; `measure.measured_replan` feeds one step back
+                into the solver and `measure.replan_to_fixed_point`
+                iterates the loop to convergence
 """
-from .channels import ChannelSet, Fifo, FifoStats
+
+
+def as_selection(plan):
+    """The one plan -> executable-Selection materialisation rule.
+
+    Accepts a `core.stg.Selection` (passed through), a solver
+    ``TradeoffResult`` (its ``.selection``), or a planner ``PlanResult``
+    (per-stage (impl, replicas) choices) — every executor entry point
+    (`jax_pipe.LMPipeline` via `selection_from_plan`,
+    `interpreter.execute`, `decode.DecodePipeline`) funnels through here
+    instead of re-implementing the mapping.
+    """
+    from ...core.stg import Selection
+    if isinstance(plan, Selection):
+        return plan
+    if hasattr(plan, "selection"):          # TradeoffResult
+        return plan.selection
+    sel = Selection()
+    for sp in plan.stages:                  # PlanResult
+        sel.set(sp.name, sp.impl, sp.replicas)
+    return sel
+
+
+from .channels import ChannelSet, Fifo, FifoStats, StreamChannel
+from .engine import (Engine, EngineResult, EventLoopStats, Op, StageProgram,
+                     run_event_loop, steady_inverse)
 from .interpreter import PipelineRun, execute, execute_materialized
 from .jax_pipe import (LMPipeline, LMPipelineResult, build_lm_stages,
                        selection_from_plan)
-from .measure import (PipelineReport, StageMeasurement, calibrate, compare,
-                      compare_lm, measured_replan)
+from .decode import DecodePipeline, ServeRunResult
+from .measure import (FixedPointResult, PipelineReport, StageMeasurement,
+                      calibrate, compare, compare_lm, measured_replan,
+                      replan_to_fixed_point)
 from .placement import Placement, StageSlice, place, tp_of
 from .schedule import (fill_drain, fill_drain_bubble, max_live_activations,
                        one_f_one_b)
 
 __all__ = [
-    "ChannelSet", "Fifo", "FifoStats",
+    "as_selection",
+    "ChannelSet", "Fifo", "FifoStats", "StreamChannel",
+    "Engine", "EngineResult", "EventLoopStats", "Op", "StageProgram",
+    "run_event_loop", "steady_inverse",
     "PipelineRun", "execute", "execute_materialized",
     "LMPipeline", "LMPipelineResult", "build_lm_stages", "selection_from_plan",
-    "PipelineReport", "StageMeasurement", "calibrate", "compare",
-    "compare_lm", "measured_replan",
+    "DecodePipeline", "ServeRunResult",
+    "FixedPointResult", "PipelineReport", "StageMeasurement", "calibrate",
+    "compare", "compare_lm", "measured_replan", "replan_to_fixed_point",
     "Placement", "StageSlice", "place", "tp_of",
     "fill_drain", "fill_drain_bubble", "max_live_activations", "one_f_one_b",
 ]

@@ -173,11 +173,17 @@ class Fifo:
 
     # -- device staging ------------------------------------------------------
     def _maybe_prefetch(self) -> None:
+        """Stage head tokens on device.  A raising ``prefetch_fn`` leaves
+        the queue consistent: the failing token stays un-staged and
+        poppable, nothing is dropped, and no slot accounting moved — the
+        exception propagates to the caller, but the channel cannot leak
+        capacity or wedge its consumers."""
         if self.prefetch_fn is None:
             return
         while self._prefetched < min(len(self._q), self.prefetch_depth):
             tok, t = self._q[self._prefetched]
-            self._q[self._prefetched] = (self.prefetch_fn(tok), t)
+            staged = self.prefetch_fn(tok)      # may raise: state untouched
+            self._q[self._prefetched] = (staged, t)
             self._prefetched += 1
             self.stats.prefetches += 1
 
@@ -185,6 +191,42 @@ class Fifo:
         occ = len(self._q) + self._reserved + self._held
         self.stats.inflight_high_water = max(
             self.stats.inflight_high_water, occ)
+
+
+class StreamChannel(Fifo):
+    """A Fifo carrying an *open-ended* token stream.
+
+    Microbatch pipelines know their traffic up front (a fixed list of
+    microbatches -> a fixed op schedule); serving pipelines do not — decode
+    tokens keep arriving as long as any request slot is live, and the
+    consumer must distinguish "empty right now" (more tokens coming; keep
+    polling) from "ended" (the producer closed the stream; drain and
+    stop).  The decode pipeline's head->embed feedback edge is the
+    canonical user: sampled tokens stream back continuously until every
+    serving slot hits EOS or its budget, then the head closes the stream.
+
+    ``close()`` is the producer-side end-of-stream marker; pushing after
+    close is a protocol error.  ``exhausted`` is the consumer-side
+    termination test (closed *and* drained).
+    """
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.closed = False
+
+    def close(self) -> None:
+        self.closed = True
+
+    @property
+    def exhausted(self) -> bool:
+        return self.closed and not len(self._q)
+
+    def _append(self, tokens, ready_time: float) -> None:
+        if self.closed:
+            raise RuntimeError(
+                f"push of {len(tokens)} token(s) after close() — the "
+                f"producer declared end-of-stream")
+        super()._append(tokens, ready_time)
 
 
 @dataclass

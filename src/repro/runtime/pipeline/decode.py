@@ -1,0 +1,586 @@
+"""Decode-shape serving pipelines: prefill + token streams over placed stages.
+
+The jax microbatch pipeline (`jax_pipe`) exercises train/prefill-style
+traffic: a fixed list of microbatches, a schedule known up front.  Serving
+is the other shape the planner prices (`SHAPES["decode_32k"]`): request
+groups prefill once, then emit one token per step until every slot hits
+EOS or its budget — traffic whose length is decided *by the pipeline's own
+output*.  This module runs that shape on the same executor core:
+
+  * stages are built from the *same model code* the single-device server
+    runs — `models/lm.prefill_blocks` / `decode_blocks` over
+    `slice_periods` of the stacked parameters — so a pipelined serve is
+    token-identical to `LMServer.serve_round` under greedy sampling;
+  * every block stage keeps its **KV/SSM cache slice resident on its
+    placement slice**: the prefill op constructs the stage's cache shard
+    on the stage's device, decode ops update it in place of the group,
+    and only the (B, 1, d_model) hidden state crosses inter-stage FIFOs;
+  * request groups map to stage replicas by ``gid % nr`` (cache
+    affinity), so a replicated stage serves groups concurrently exactly
+    like the plan's round-robin replication;
+  * the head stage samples on retirement and feeds the token back to the
+    embed stage over a `channels.StreamChannel` — the continuous
+    token-stream mode: decode ops are *scheduled as tokens arrive* (the
+    engine's pending-or-inflight termination), and the stream closes when
+    the last group drains.
+
+Placement folds tp > 1 slices onto their first device (decode stage
+bodies are single-device jits; sharding decode over a sub-mesh is a
+ROADMAP item) — the plan's replica structure, not its intra-stage
+sharding, is what this backend executes.  Encoder-decoder and multimodal
+frontends are rejected: the pipeline runs embed -> blocks -> head only.
+
+`runtime/server.LMServer` uses this as its pipelined backend
+(``LMServer(cfg, pipeline=DecodePipeline(...))``); see
+`examples/serve_lm.py --pipeline` and `benchmarks/bench_serve.py`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...configs.base import ModelConfig
+from ...core.stg import STG
+from ...models import blocks, lm
+from ...models.common import dtype_of, rmsnorm
+from ..server import _bucket            # one bucketing rule: token parity
+from .channels import Fifo, StreamChannel
+from .engine import Engine, EngineResult, Op
+from .placement import Placement, place
+
+
+# ===========================================================================
+# stage computation (models/lm over period slices)
+# ===========================================================================
+def _embed_prefill_fn(cfg: ModelConfig):
+    dt = dtype_of(cfg.compute_dtype)
+
+    def fn(p, tokens):
+        return jnp.take(p["embed"], tokens, axis=0).astype(dt)
+    return fn
+
+
+def _block_prefill_fn(cfg: ModelConfig):
+    def fn(p, x, cap):
+        S = x.shape[1]
+        return lm.prefill_blocks(cfg, p, x, jnp.arange(S), cap=cap)
+    return fn
+
+
+def _block_decode_fn(cfg: ModelConfig):
+    def fn(p, cache, x, pos):
+        return lm.decode_blocks(cfg, p, cache, x, pos)
+    return fn
+
+
+def _head_fn(cfg: ModelConfig):
+    def fn(p, x):
+        h = x[:, -1:]
+        h = rmsnorm(h, p["norm"], cfg.norm_eps)
+        return h @ p["w"].astype(h.dtype)
+    return fn
+
+
+# ===========================================================================
+# run state
+# ===========================================================================
+@dataclass
+class _Group:
+    """One serving slot group: a batch of requests decoding in lockstep,
+    mirroring `LMServer.serve_round`'s round semantics exactly (same
+    bucketing, same EOS/budget bookkeeping) so completions are
+    token-identical."""
+    gid: int
+    tokens: np.ndarray                 # (B, bucket) right-aligned prompts
+    bucket: int
+    cap: int
+    budget: np.ndarray
+    done: np.ndarray = None
+    out_tokens: list = None
+    steps: int = 0                     # completed decode steps
+    cur: np.ndarray = None             # last sampled token per slot (B,)
+    t_start: float = 0.0
+    t_prefill_done: float = 0.0
+    t_last: float = 0.0
+    decode_done_s: list = field(default_factory=list)
+
+    @property
+    def batch(self) -> int:
+        return self.tokens.shape[0]
+
+
+@dataclass
+class ServeRunResult(EngineResult):
+    """One pipelined serve: per-request tokens + the engine's measurement
+    surface (stage completion streams, fifo stats, trace).  As an
+    `EngineResult` it exposes ``stage_inverse_us``, so a serve run feeds
+    `measure.compare_lm(stg, sel, run,
+    stage_map=pipe.graph_stage_map())` exactly like an LM microbatch run
+    — serving traffic is a calibration source for re-planning too."""
+    tokens: list = field(default_factory=list)   # per request, generated
+    group_of: list = field(default_factory=list)  # request index -> group id
+    groups: list = field(default_factory=list)   # _Group bookkeeping
+    fifo_stats: dict = field(default_factory=dict)
+    placement: Placement | None = None
+
+    @property
+    def decode_tokens(self) -> int:
+        return sum(len(t) for t in self.tokens)
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(g.batch * g.bucket for g in self.groups)
+
+    def decode_done_s(self) -> list[float]:
+        """Merged decode-step completion times across groups (run-relative,
+        sorted) — the serving-side analogue of a stage's completion
+        stream."""
+        return sorted(t for g in self.groups for t in g.decode_done_s)
+
+    def decode_tokens_per_s(self) -> float:
+        """Steady-state generated tokens/s from the merged decode
+        completion stream (excludes prefill and the fill ramp; falls back
+        to wall-clock for very short runs)."""
+        ts = self.decode_done_s()
+        toks_per_step = (sum(g.batch for g in self.groups)
+                         / max(1, len(self.groups)))
+        if len(ts) >= 3:
+            k = max(1, len(ts) // 4)
+            w = ts[k:]
+            if len(w) >= 2 and w[-1] > w[0]:
+                return toks_per_step * (len(w) - 1) / (w[-1] - w[0])
+        return self.decode_tokens / max(self.wall_s, 1e-9)
+
+    def token_latencies_s(self) -> list[float]:
+        """Per-token latency samples: gaps between successive decode-step
+        completions *within* each group (what a client slot observes)."""
+        out = []
+        for g in self.groups:
+            ts = [g.t_prefill_done] + list(g.decode_done_s)
+            out.extend(b - a for a, b in zip(ts, ts[1:]))
+        return out
+
+
+# ===========================================================================
+# stage programs
+# ===========================================================================
+class _ServeStageProgram:
+    """One serving stage's op queue on the shared engine.
+
+    Ops arrive dynamically: prefill ops for all groups are enqueued up
+    front; each decode op is enqueued (to *every* stage, with one global
+    sequence number) the moment the head samples the previous token — the
+    queue order is therefore identical across stages and every FIFO sees
+    a contiguous seq stream, re-sorted by the engine's reorder buffers
+    when replicas retire out of order."""
+
+    def __init__(self, s: int, pipe: "DecodePipeline", run: "_ServeRun"):
+        self.s = s
+        self.S = len(pipe.stage_names)
+        self.name = pipe.stage_names[s]
+        self.pipe = pipe
+        self.run = run
+        self.n_replicas = len(pipe.stage_devices[s])
+        self.queue: list = []          # (kind, gid, seq, pos)
+        self.pos_i = 0
+        self.stall_mark = -1
+        self.caches: dict[int, object] = {}    # gid -> resident cache slice
+
+    def enqueue(self, kind: str, gid: int, seq: int, pos: int) -> None:
+        self.queue.append((kind, gid, seq, pos))
+
+    def pending(self) -> int:
+        return len(self.queue) - self.pos_i
+
+    def peek(self) -> Op | None:
+        if self.pos_i >= len(self.queue):
+            return None
+        kind, gid, seq, _ = self.queue[self.pos_i]
+        return Op(stage=self.s, kind=kind, seq=seq,
+                  rep=gid % self.n_replicas)
+
+    def ready(self, op: Op) -> bool:
+        s, S, run = self.s, self.S, self.run
+        if s > 0 and not run.acts[s - 1].can_pop(1):
+            return False
+        if s == 0 and op.kind == "D" and not run.feedback.can_pop(1):
+            return False
+        if s < S - 1 and not run.acts[s].can_push(1):
+            if self.stall_mark != self.pos_i:
+                self.stall_mark = self.pos_i
+                run.acts[s].note_stall()
+            return False
+        return True
+
+    def dispatch(self, op: Op):
+        s, S, run, pipe = self.s, self.S, self.run, self.pipe
+        kind, gid, seq, pos = self.queue[self.pos_i]
+        self.pos_i += 1
+        g = run.groups[gid]
+        dev = pipe.stage_devices[s][op.rep]
+        params = pipe.stage_params[s][op.rep]
+        if s == 0:                                        # embed
+            if kind == "P":
+                g.t_start = time.perf_counter()
+                x = jnp.asarray(g.tokens)
+                task = (_run_stage,
+                        (pipe._embed_prefill, params, (x,), dev))
+            else:
+                seq_got, (gid_got, toks) = run.feedback.pop(1)[0]
+                assert (seq_got, gid_got) == (seq, gid), \
+                    f"feedback order broke: {(seq_got, gid_got)}!={(seq, gid)}"
+                task = (_run_stage,
+                        (pipe._embed_decode, params, (toks,), dev))
+        else:
+            seq_got, (gid_got, x) = run.acts[s - 1].pop_hold(1)[0]
+            assert (seq_got, gid_got) == (seq, gid), \
+                f"fifo order broke: {(seq_got, gid_got)}!={(seq, gid)}"
+            op.releases.append((run.acts[s - 1], 1))
+            if s == S - 1:                                # head
+                task = (_run_stage, (pipe._head, params, (x,), dev))
+            elif kind == "P":
+                task = (_run_stage_static_cap,
+                        (pipe._block_prefill, params, x, g.cap, dev))
+            else:
+                cache = self.caches[gid]
+                task = (_run_stage,
+                        (pipe._block_decode, params,
+                         (cache, x, jnp.asarray(pos, jnp.int32)), dev))
+        if s < S - 1:
+            run.acts[s].reserve(1)
+        return task
+
+    def retire(self, op: Op, result, engine: Engine) -> float:
+        s, S, run = self.s, self.S, self.run
+        out, t_done = result
+        gid = run.gid_of[op.seq]
+        if s == S - 1:                                    # head: sample
+            run.on_head(op, out, t_done, engine)
+        elif s == 0:                                      # embed
+            engine.ordered_push(run.acts[s], op.seq, (gid, out), t_done)
+        else:                                             # block stage:
+            h, cache = out                                # cache stays
+            self.caches[gid] = cache                      # resident here
+            engine.ordered_push(run.acts[s], op.seq, (gid, h), t_done)
+        return t_done
+
+    def describe(self) -> str:
+        return f"{self.name}: {self.pos_i}/{len(self.queue)}"
+
+
+def _run_stage(fn, params, args, dev):
+    args = tuple(jax.device_put(a, dev) if hasattr(a, "shape") else a
+                 for a in args)
+    out = fn(params, *args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter()
+
+
+def _run_stage_static_cap(fn, params, x, cap, dev):
+    x = jax.device_put(x, dev)
+    out = fn(params, x, cap)
+    jax.block_until_ready(out)
+    return out, time.perf_counter()
+
+
+class _ServeRun:
+    """Shared state of one pipelined serve: groups, channels, the global
+    op sequence, and the head-side sampling/bookkeeping."""
+
+    def __init__(self, pipe: "DecodePipeline", groups: list, *,
+                 eos_id: int, capacity_blocks: int, overlap: bool,
+                 temperature: float | None = None):
+        self.pipe = pipe
+        self.groups = groups
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.gid_of: list[int] = []            # seq -> gid
+        self.programs = [_ServeStageProgram(s, pipe, self)
+                         for s in range(len(pipe.stage_names))]
+        S = len(self.programs)
+        self.acts = [pipe._edge_fifo(s, capacity_blocks, overlap)
+                     for s in range(S - 1)]
+        # the continuous token stream: head -> embed feedback.  At most
+        # one token per live group is ever in flight (a group's next op
+        # consumes it before its next push), so n_groups slots suffice.
+        self.feedback = StreamChannel(block=1, capacity_blocks=1,
+                                      min_capacity=max(2, len(groups)))
+        self.open_groups = len(groups)
+
+    def enqueue(self, kind: str, gid: int, pos: int) -> int:
+        seq = len(self.gid_of)
+        self.gid_of.append(gid)
+        for p in self.programs:
+            p.enqueue(kind, gid, seq, pos)
+        return seq
+
+    def on_head(self, op: Op, logits, t_done: float, engine: Engine) -> None:
+        """Sample at head retirement and schedule the group's next decode
+        step (or retire the group) — `LMServer.serve_round` bookkeeping,
+        verbatim, so completions are token-identical."""
+        g = self.groups[self.gid_of[op.seq]]
+        nxt = np.asarray(self.pipe._sample(logits, g.gid, self.temperature))
+        if op.kind == "P":
+            g.t_prefill_done = t_done - engine.t0
+            g.cur = nxt.astype(np.int32)
+            for i in range(g.batch):
+                g.out_tokens[i] = [int(nxt[i])]
+            g.done = np.array([t[0] == self.eos_id for t in g.out_tokens])
+        else:
+            g.steps += 1
+            g.decode_done_s.append(t_done - engine.t0)
+            for i in range(g.batch):
+                if not g.done[i] and g.steps < g.budget[i]:
+                    tok = int(nxt[i])
+                    g.out_tokens[i].append(tok)
+                    if tok == self.eos_id:
+                        g.done[i] = True
+                elif not g.done[i]:
+                    g.done[i] = True
+            g.cur = nxt.astype(np.int32)
+        if (not g.done.all()) and g.steps < g.budget.max() - 1:
+            seq = self.enqueue("D", g.gid, g.bucket + g.steps)
+            self.feedback.push([(seq, (g.gid, g.cur[:, None]))], t_done)
+        else:
+            g.t_last = t_done - engine.t0
+            for p in self.programs:            # free the group's resident
+                p.caches.pop(g.gid, None)      # cache slices immediately
+            self.open_groups -= 1
+            if self.open_groups == 0:
+                self.feedback.close()
+
+
+# ===========================================================================
+# the pipeline
+# ===========================================================================
+class DecodePipeline:
+    """A placed serving pipeline: prefill + decode token streams through a
+    planned, placed, replicated LM stage graph.
+
+    ``stg``/``sel`` come from the planner on a decode shape
+    (`as_selection` accepts the PlanResult directly);
+    ``periods_per_stage`` groups adjacent block-pattern periods into one
+    stage (the decode analogue of ``layers_per_stage``).  ``params``
+    overrides the default `models/lm.init_params(cfg, PRNGKey(seed))` —
+    pass the single-device server's params for A/B parity.
+    """
+
+    def __init__(self, cfg: ModelConfig, stg: STG, sel, *,
+                 devices=None, periods_per_stage: int = 1,
+                 capacity_blocks: int = 2, seed: int = 0,
+                 overlap: bool = True, replica_queue: int = 2,
+                 workers: int | None = None, params=None,
+                 temperature: float = 0.0):
+        from . import as_selection
+        sel = as_selection(sel)
+        if cfg.encdec or cfg.frontend:
+            raise ValueError(
+                f"{cfg.name}: DecodePipeline runs embed->blocks->head "
+                f"decoder pipelines only (enc-dec / multimodal frontends "
+                f"are a ROADMAP item)")
+        self.cfg = cfg
+        self.overlap = overlap
+        self.replica_queue = max(1, replica_queue)
+        self.workers = workers
+        self.temperature = temperature
+        devices = list(devices if devices is not None else jax.devices())
+        self._keys = {}
+        self._base_key = jax.random.PRNGKey(seed ^ 0xC0FFEE)
+
+        L = len(cfg.block_pattern)
+        pps = max(1, periods_per_stage)
+        graph_blocks = [n for n in stg.topo_order()
+                        if n not in ("embed", "head")]
+        if not all(n.startswith("block") for n in graph_blocks):
+            raise ValueError(
+                f"graph nodes {graph_blocks} are not decoder blocks: "
+                f"DecodePipeline executes embed->blocks->head only")
+        if len(graph_blocks) != cfg.n_layers:
+            raise ValueError(
+                f"graph has {len(graph_blocks)} block nodes but the model "
+                f"has {cfg.n_layers} layers — plan and model disagree")
+
+        params = params if params is not None \
+            else lm.init_params(cfg, jax.random.PRNGKey(seed))
+        head_w = params["embed"].T if cfg.tie_embeddings else params["head"]
+
+        # stage list: embed, one per pps-period group, head.  Each block
+        # stage owns periods [a, b) == layers [a*L, b*L); its params and
+        # its runtime cache are `slice_periods` of the stacked pytrees.
+        self.stage_names: list[str] = []
+        self.stage_params: list[dict] = []     # stage -> {rep: pytree}
+        self.stage_devices: list[list] = []
+        self.period_span: list = []            # stage -> (lo, hi) or None
+        pl = place(stg, sel, devices)
+        self.placement = pl
+
+        def owners_of(lo_p, hi_p):
+            return [f"block{li:02d}" for li in range(lo_p * L, hi_p * L)]
+
+        spans = [(a, min(a + pps, cfg.n_periods))
+                 for a in range(0, cfg.n_periods, pps)]
+        stages = [("embed", None)] + [
+            (f"blocks{idx:02d}", sp) for idx, sp in enumerate(spans)] \
+            + [("head", None)]
+        for name, span in stages:
+            if span is None:
+                owners = [name]
+                stage_p = ({"embed": params["embed"]} if name == "embed"
+                           else {"norm": params["final_norm"], "w": head_w})
+            else:
+                owners = owners_of(*span)
+                picks = {sel.choices[o] for o in owners}
+                if len(picks) > 1:
+                    raise ValueError(
+                        f"stage {name} groups graph nodes {owners} whose "
+                        f"plan choices differ ({sorted(picks)}) — use "
+                        f"periods_per_stage=1 or align the plan")
+                stage_p = lm.slice_periods(params["layers"], *span)
+            slices = [sl for owner in owners for sl in pl.replicas_of(owner)]
+            devs, reps = [], {}
+            for k, sl in enumerate(slices):
+                # decode stages are single-device jits: a tp>1 slice folds
+                # onto its first device (plan replicas, not intra-stage
+                # sharding, are what this backend executes)
+                dev = sl.resolve(devices)[0]
+                devs.append(dev)
+                reps[k] = jax.device_put(stage_p, dev)
+            if not devs:
+                devs = [devices[0]]
+                reps = {0: jax.device_put(stage_p, devices[0])}
+            self.stage_names.append(name)
+            self.stage_devices.append(devs)
+            self.stage_params.append(reps)
+            self.period_span.append(span)
+
+        self._embed_prefill = jax.jit(_embed_prefill_fn(cfg))
+        self._embed_decode = jax.jit(_embed_prefill_fn(cfg))  # same math, (B,1)
+        self._block_prefill = jax.jit(_block_prefill_fn(cfg),
+                                      static_argnums=(2,))
+        self._block_decode = jax.jit(_block_decode_fn(cfg))
+        self._head = jax.jit(_head_fn(cfg))
+
+    # -- sampling -----------------------------------------------------------
+    def _sample(self, logits, gid: int, temperature: float | None = None):
+        """Greedy by default (token-identical to the single-device
+        server); temperature > 0 samples from a per-group key stream —
+        statistically equivalent to, but not draw-identical with, the
+        single-device server's single key stream."""
+        t = self.temperature if temperature is None else temperature
+        if t <= 0.0:
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        key = self._keys.get(gid, jax.random.fold_in(self._base_key, gid))
+        key, sub = jax.random.split(key)
+        self._keys[gid] = key
+        return jax.random.categorical(
+            sub, logits[:, -1, :] / t, axis=-1).astype(jnp.int32)
+
+    def _edge_fifo(self, s: int, capacity_blocks: int, overlap: bool) -> Fifo:
+        # same slot accounting as the LM pipeline: reservations from
+        # producer dispatch to consumer retirement, plus buffered slack
+        prod = len(self.stage_devices[s])
+        cons = len(self.stage_devices[s + 1])
+        cons_devs = self.stage_devices[s + 1]
+
+        def staging(tok):
+            gid, y = tok
+            return (gid, jax.device_put(y, cons_devs[gid % cons]))
+
+        slots = (prod + cons) * self.replica_queue
+        return Fifo(block=1, capacity_blocks=capacity_blocks,
+                    min_capacity=capacity_blocks + slots,
+                    prefetch_fn=staging if overlap else None,
+                    prefetch_depth=cons * self.replica_queue)
+
+    def _n_workers(self) -> int:
+        if self.workers is not None:
+            return max(1, self.workers)
+        return min(16, max(2, sum(len(d) for d in self.stage_devices)))
+
+    def graph_stage_map(self) -> dict[str, str]:
+        """graph node -> executed stage name (block nodes collapse onto
+        the period-group stage that owns them) — the ``stage_map``
+        `measure.compare_lm` needs to read a serve run's completion
+        streams against the decode-shape plan."""
+        L = len(self.cfg.block_pattern)
+        out = {}
+        for name, span in zip(self.stage_names, self.period_span):
+            if span is None:
+                out[name] = name
+            else:
+                for li in range(span[0] * L, span[1] * L):
+                    out[f"block{li:02d}"] = name
+        return out
+
+    # -- serving ------------------------------------------------------------
+    def serve(self, prompts: list[list[int]], max_new, *, eos_id: int = 1,
+              group_size: int = 8, capacity_blocks: int = 2,
+              overlap: bool | None = None,
+              temperature: float | None = None) -> ServeRunResult:
+        """Serve ``prompts`` in ``group_size`` slot groups streamed
+        concurrently through the pipeline.  Grouping, bucketing, and
+        EOS/budget bookkeeping mirror `LMServer.serve_round` on each
+        group, so a single-device server with ``max_batch=group_size``
+        produces token-identical completions.  ``temperature`` overrides
+        the pipeline-level default for this run."""
+        if not prompts:
+            raise ValueError("serve() needs at least one prompt")
+        overlap = self.overlap if overlap is None else overlap
+        if isinstance(max_new, int):
+            max_new = [max_new] * len(prompts)
+        if len(max_new) != len(prompts):
+            raise ValueError("max_new must be a scalar or match prompts")
+        groups: list[_Group] = []
+        group_of: list[int] = []
+        for gid, lo in enumerate(range(0, len(prompts), group_size)):
+            chunk = prompts[lo:lo + group_size]
+            budgets = np.array(max_new[lo:lo + group_size])
+            plen = max(len(p) for p in chunk)
+            bucket = _bucket(plen)
+            # same capacity clamp as lm.prefill: SWA archs ring-buffer the
+            # cache at the attention window — an unclamped cap would let
+            # the pipeline attend further back than the single-device
+            # server and break token parity on windowed configs
+            cap = blocks.attn_cache_capacity(
+                self.cfg, bucket + int(budgets.max()))
+            toks = np.zeros((len(chunk), bucket), np.int32)
+            for i, p in enumerate(chunk):          # right-align prompts so
+                toks[i, bucket - len(p):] = p      # last token is real
+            groups.append(_Group(
+                gid=gid, tokens=toks, bucket=bucket, cap=cap,
+                budget=budgets, out_tokens=[None] * len(chunk)))
+            group_of.extend([gid] * len(chunk))
+
+        run = _ServeRun(self, groups, eos_id=eos_id,
+                        capacity_blocks=capacity_blocks, overlap=overlap,
+                        temperature=temperature)
+        for g in groups:
+            run.enqueue("P", g.gid, 0)
+        engine = Engine(run.programs, overlap=overlap,
+                        workers=self._n_workers(),
+                        replica_queue=self.replica_queue)
+        er = engine.run()
+        assert run.feedback.exhausted, \
+            "token stream not drained: a group retired with tokens in flight"
+        for g in groups:                       # run-relative group timings
+            g.t_start = max(0.0, g.t_start - engine.t0)
+
+        res = ServeRunResult(
+            tokens=[], group_of=group_of, groups=groups,
+            stage_done_s=er.stage_done_s, stage_seconds=er.stage_seconds,
+            stage_firings=er.stage_firings, op_trace=er.op_trace,
+            max_inflight=er.max_inflight, wall_s=er.wall_s,
+            placement=self.placement)
+        idx_in_group: dict[int, int] = {}
+        for gid in group_of:
+            i = idx_in_group.get(gid, 0)
+            idx_in_group[gid] = i + 1
+            res.tokens.append(groups[gid].out_tokens[i])
+        for s in range(len(run.acts)):
+            res.fifo_stats[("act", s)] = run.acts[s].stats
+        res.fifo_stats["feedback"] = run.feedback.stats
+        return res

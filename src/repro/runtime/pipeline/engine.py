@@ -1,0 +1,334 @@
+"""Graph-generic executor core: one scheduler, many stage-program backends.
+
+The streaming executors used to carry their own event loops — `jax_pipe`
+had a 150-line non-blocking dispatch/retire loop and `interpreter` a
+discrete-event heap — duplicating the parts that are actually
+graph-generic: FIFO credit accounting, per-edge reorder buffers, per-op
+completion timing, replica busy budgets, and deadlock/wedge detection.
+This module owns those parts once, in two clock domains:
+
+  * **`Engine`** (wall clock) — the asynchronous overlapped scheduler.
+    A `StageProgram` per pipeline stage exposes dispatch/retire/readiness
+    hooks; the engine scans programs downstream-first, hands dispatched
+    ops to a worker pool (or runs them inline under ``overlap=False``),
+    retires them on completion events, releases their channel credits,
+    and records the completion-time streams the measurement layer reads.
+    Backends: `jax_pipe.LMPipeline` (microbatch F/B over jax devices) and
+    `decode.DecodePipeline` (prefill/decode serving with KV-cache
+    residency and a token feedback stream).  Programs may *grow* their op
+    queues while the engine runs (decode steps are scheduled as sampled
+    tokens stream back), so termination is pending-or-inflight, not a
+    precomputed op count.
+
+  * **`run_event_loop`** (virtual clock) — the discrete-event driver the
+    host interpreter runs on.  An `EventProgram` per materialised node
+    exposes ``ready_time``/``fire``; the loop owns the heap, candidate
+    re-queueing, wake-set propagation, and the firing/cycle caps.  Node
+    semantics (rates, FORK/JOIN state, source streams, device busy
+    clocks) stay in the backend — the loop never inspects tokens.
+
+Both domains emit the same measurement surface: per-stage streams of
+completion (or firing) times whose steady-state gap is the stage's
+measured inverse throughput (`steady_inverse`).  A replicated stage's
+streams merge, so the measured value reads ii/nr in either domain — one
+`measure.compare` core serves every executor instead of special-casing
+the two runs.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Protocol, runtime_checkable
+
+from .channels import Fifo
+
+
+def steady_inverse(samples: Iterable[float], warmup_frac: float = 0.25,
+                   min_samples: int = 4) -> float:
+    """Steady-state gap of one completion/firing-time stream: drop the
+    pipeline-fill ramp, then average the remaining inter-event gaps.
+    Raises ValueError below ``min_samples`` — callers decide their own
+    degraded fallback (or skip the stage)."""
+    ts = sorted(samples)
+    if len(ts) < min_samples:
+        raise ValueError(f"too few samples ({len(ts)} < {min_samples})")
+    k = max(1, int(len(ts) * warmup_frac))
+    window = ts[k:]
+    if len(window) < 2 or window[-1] <= window[0]:
+        raise ValueError("degenerate completion stream (no measurable gap)")
+    return (window[-1] - window[0]) / (len(window) - 1)
+
+
+# ===========================================================================
+# wall-clock domain: asynchronous overlapped scheduler
+# ===========================================================================
+@dataclass
+class Op:
+    """One dispatched firing, in flight between dispatch and retirement.
+
+    ``seq`` orders the op on every edge it crosses (microbatch index for
+    LM pipelines, global stream index for decode); ``releases`` lists
+    (fifo, n) credits the engine frees at retirement — also on *failed*
+    ops, so a raising stage body cannot leak channel slots."""
+    stage: int
+    kind: str
+    seq: int
+    rep: int
+    t_dispatch: float = 0.0
+    releases: list = field(default_factory=list)       # (Fifo, n)
+    is_firing: bool = True       # contributes to the stage's completion
+    #                              stream (jax path: F ops only)
+
+
+@runtime_checkable
+class StageProgram(Protocol):
+    """Per-stage hooks the wall-clock engine drives.
+
+    The engine owns *when*; the program owns *what*: which op comes next
+    (``peek``), whether its data/credits are available (``ready`` — claim
+    nothing, count producer stalls), how to run it (``dispatch`` —
+    consume inputs, reserve output credits, return a thunk safe to run on
+    a worker thread), and what its completion means (``retire`` — push
+    outputs via ``engine.ordered_push``, return the op's completion
+    timestamp)."""
+
+    name: str
+    n_replicas: int
+
+    def pending(self) -> int: ...
+    def peek(self) -> Op | None: ...
+    def ready(self, op: Op) -> bool: ...
+    def dispatch(self, op: Op) -> tuple[Callable, tuple]: ...
+    def retire(self, op: Op, result: Any, engine: "Engine") -> float: ...
+
+    def describe(self) -> str:              # deadlock diagnostics
+        ...
+
+
+@dataclass
+class EngineResult:
+    """The generic half of an execution's result: per-stage timing streams
+    and op bookkeeping.  Backends embed/alias these fields into their own
+    result types (`LMPipelineResult`, `ServeRunResult`)."""
+    stage_seconds: dict[str, float] = field(default_factory=dict)
+    stage_firings: dict[str, int] = field(default_factory=dict)
+    stage_done_s: dict[str, list[float]] = field(default_factory=dict)
+    op_trace: list = field(default_factory=list)
+    # (stage, kind, seq, replica, t_dispatch, t_done) run-relative
+    max_inflight: int = 0
+    wall_s: float = 0.0
+
+    def stage_inverse_us(self, name: str) -> float:
+        """Steady-state microseconds per firing of one stage (merged
+        replica completion streams -> effective ii/nr).  Runs too short
+        for a steady state fall back to mean in-flight latency per op —
+        a degraded mode callers should not calibrate on."""
+        try:
+            return steady_inverse(self.stage_done_s.get(name, ())) * 1e6
+        except ValueError:
+            n = self.stage_firings.get(name, 0)
+            return (self.stage_seconds.get(name, 0.0) / n * 1e6
+                    if n else float("nan"))
+
+
+class Engine:
+    """Non-blocking scheduler over a list of `StageProgram`s.
+
+    ``overlap=True`` hands dispatched ops to a thread pool and retires
+    them on completion; ``overlap=False`` is the serial A/B baseline
+    (dispatch, block, advance).  ``replica_queue`` caps in-flight ops per
+    stage replica (1 = strict serial worker, 2 = short device queue).
+    The engine owns the per-edge reorder buffers (`ordered_push`): slots
+    are reserved at dispatch, so deferred pushes cannot overflow, and
+    each fifo stays seq-sorted no matter which replica retires first.
+    """
+
+    def __init__(self, programs: list, *, overlap: bool = True,
+                 workers: int = 8, replica_queue: int = 2):
+        self.programs = list(programs)
+        self.overlap = overlap
+        self.workers = max(1, workers)
+        self.replica_queue = max(1, replica_queue)
+        self.result = EngineResult()
+        self.t0 = 0.0
+        self._busy = [[0] * max(1, p.n_replicas) for p in self.programs]
+        self._reorder: dict[int, tuple[dict, list]] = {}
+        for p in self.programs:
+            self.result.stage_seconds[p.name] = 0.0
+            self.result.stage_firings[p.name] = 0
+            self.result.stage_done_s[p.name] = []
+
+    def ordered_push(self, fifo: Fifo, seq: int, tok, t_done: float) -> None:
+        """Stage an out-of-order completion so ``fifo`` receives tokens in
+        seq order (slots were reserved at dispatch; cannot overflow)."""
+        pend, nxt = self._reorder.setdefault(id(fifo), ({}, [0]))
+        pend[seq] = (tok, t_done)
+        while nxt[0] in pend:
+            tok_i, t_i = pend.pop(nxt[0])
+            fifo.push_reserved([(nxt[0], tok_i)], t_i)
+            nxt[0] += 1
+
+    def _retire(self, op: Op, result) -> None:
+        prog = self.programs[op.stage]
+        t_done = prog.retire(op, result, self)
+        for fifo, n in op.releases:
+            fifo.release(n)
+        self._busy[op.stage][op.rep] -= 1
+        res = self.result
+        if op.is_firing:
+            res.stage_done_s[prog.name].append(t_done - self.t0)
+        res.stage_seconds[prog.name] += t_done - op.t_dispatch
+        res.stage_firings[prog.name] += 1
+        res.op_trace.append((prog.name, op.kind, op.seq, op.rep,
+                             op.t_dispatch - self.t0, t_done - self.t0))
+
+    def _abort(self, op: Op) -> None:
+        """An op's body raised: free its channel credits and busy slot so
+        the failure surfaces as the exception, not as a leaked-slot
+        deadlock in some later run."""
+        for fifo, n in op.releases:
+            fifo.release(n)
+        self._busy[op.stage][op.rep] -= 1
+
+    def run(self) -> EngineResult:
+        from concurrent.futures import (FIRST_COMPLETED, ThreadPoolExecutor,
+                                        wait)
+        self.t0 = time.perf_counter()
+        inflight: dict = {}                 # future -> Op
+        pool = ThreadPoolExecutor(max_workers=self.workers) \
+            if self.overlap else None
+        try:
+            while any(p.pending() for p in self.programs) or inflight:
+                progressed = False
+                # downstream-first: consumers drain fifos before producers
+                for s in reversed(range(len(self.programs))):
+                    prog = self.programs[s]
+                    op = prog.peek()
+                    if op is None:
+                        continue
+                    if self._busy[s][op.rep] >= self.replica_queue:
+                        continue
+                    if not prog.ready(op):
+                        continue
+                    fn, args = prog.dispatch(op)
+                    op.t_dispatch = time.perf_counter()
+                    self._busy[s][op.rep] += 1
+                    progressed = True
+                    if pool is None:
+                        try:
+                            result = fn(*args)
+                        except BaseException:
+                            self._abort(op)
+                            raise
+                        self._retire(op, result)
+                    else:
+                        inflight[pool.submit(fn, *args)] = op
+                        self.result.max_inflight = max(
+                            self.result.max_inflight, len(inflight))
+                done = [f for f in inflight if f.done()]
+                if not progressed and not done and inflight:
+                    done, _ = wait(list(inflight),
+                                   return_when=FIRST_COMPLETED)
+                for f in done:
+                    op = inflight.pop(f)
+                    try:
+                        result = f.result()
+                    except BaseException:
+                        self._abort(op)
+                        raise
+                    self._retire(op, result)
+                    progressed = True
+                if not progressed:
+                    state = "; ".join(p.describe() for p in self.programs)
+                    raise RuntimeError(
+                        f"pipeline deadlock: no program can dispatch and "
+                        f"nothing is in flight — schedule/backpressure "
+                        f"bug ({state})")
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
+        self.result.wall_s = time.perf_counter() - self.t0
+        return self.result
+
+
+# ===========================================================================
+# virtual-clock domain: discrete-event loop (host interpreter backend)
+# ===========================================================================
+@runtime_checkable
+class EventProgram(Protocol):
+    """One materialised node driven by the virtual-clock loop.
+
+    ``ready_time`` returns the earliest virtual time the node could fire
+    (None = blocked on tokens/space; ``count_stall`` marks the heap-pop
+    re-check, where a deferral is a real producer stall, not a readiness
+    probe).  ``fire`` consumes/computes/produces at ``now`` and returns
+    (done_time, busy_cycles, wake) — the nodes whose readiness may have
+    changed."""
+
+    name: str
+
+    def ready_time(self, count_stall: bool = False) -> float | None: ...
+    def fire(self, now: float) -> tuple[float, float, Iterable[str]]: ...
+
+
+@dataclass
+class EventLoopStats:
+    fire_times: dict[str, list[float]] = field(default_factory=dict)
+    fired: dict[str, int] = field(default_factory=dict)
+    busy_cycles: dict[str, float] = field(default_factory=dict)
+    cycles: float = 0.0
+    total_fired: int = 0
+    hit_cycle_cap: bool = False
+
+
+def run_event_loop(programs: dict[str, EventProgram], *,
+                   max_firings: int = 1_000_000,
+                   max_cycles: float = 1e12) -> EventLoopStats:
+    """Drive `EventProgram`s to quiescence under a virtual clock.
+
+    Deterministic: among fireable nodes the earliest (t, insertion seq)
+    fires.  A popped candidate is re-checked (it may have been blocked by
+    an earlier firing) and either fires, re-queues at its new ready time,
+    or is dropped — a later pop/firing of a waker re-queues it.
+    """
+    stats = EventLoopStats()
+    for n in programs:
+        stats.fire_times[n] = []
+        stats.fired[n] = 0
+        stats.busy_cycles[n] = 0.0
+
+    seq = 0
+    heap: list[tuple[float, int, str]] = []
+
+    def push_candidate(name: str) -> None:
+        nonlocal seq
+        t = programs[name].ready_time()
+        if t is not None:
+            heapq.heappush(heap, (t, seq, name))
+            seq += 1
+
+    for n in programs:
+        push_candidate(n)
+
+    while heap and stats.total_fired < max_firings:
+        now, _, name = heapq.heappop(heap)
+        if now > max_cycles:
+            stats.hit_cycle_cap = True
+            break
+        t = programs[name].ready_time(count_stall=True)
+        if t is None:
+            continue            # became blocked; a pop/firing requeues it
+        if t > now:
+            heapq.heappush(heap, (t, seq, name))
+            seq += 1
+            continue
+        done, busy, wake = programs[name].fire(now)
+        stats.fired[name] += 1
+        stats.fire_times[name].append(now)
+        stats.busy_cycles[name] += busy
+        stats.total_fired += 1
+        stats.cycles = max(stats.cycles, done)
+        for c in set(wake) | {name}:
+            push_candidate(c)
+    return stats

@@ -11,6 +11,13 @@ actual program output — bitwise comparable against the KPN simulator — and
 firing timestamps give *measured* steady-state inverse throughput per
 stage, comparable against `core/throughput.analyze`.
 
+The event loop itself is the graph-generic executor core's virtual-clock
+driver (`engine.run_event_loop`): this module only defines the per-node
+*program* (`_HostNode`) — KPN firing rules, FORK/JOIN routing state,
+multirate token blocks, source streams, and per-device busy clocks.  The
+loop owns the heap, candidate re-queueing, wake-set propagation, and the
+firing/cycle caps, shared with the wall-clock engine the jax paths run on.
+
 Firing rule (deterministic, KPN + backpressure):
   a worker may fire at time t when
     * every required input port holds a full rate-block visible by t
@@ -23,13 +30,13 @@ Firing rule (deterministic, KPN + backpressure):
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 
 from ...core.fork_join import LITERAL, ForkJoinModel
 from ...core.stg import FORK, JOIN, STG, Selection
 from ...core.transform import ReplicatedGraph, materialize
 from .channels import ChannelSet
+from .engine import run_event_loop, steady_inverse
 from .placement import Placement, StageSlice, place
 
 
@@ -48,11 +55,10 @@ class PipelineRun:
     def inverse_throughput(self, worker: str, warmup_frac: float = 0.25) -> float:
         """Steady-state cycles per firing at one worker (drop pipeline fill)."""
         times = self.fire_times[worker]
-        if len(times) < 4:
+        try:
+            return steady_inverse(times, warmup_frac)
+        except ValueError:
             raise ValueError(f"too few firings at {worker} ({len(times)})")
-        k = max(1, int(len(times) * warmup_frac))
-        window = times[k:]
-        return (window[-1] - window[0]) / (len(window) - 1)
 
     def stage_inverse_throughput(self, stage: str,
                                  warmup_frac: float = 0.25) -> float:
@@ -60,12 +66,11 @@ class PipelineRun:
         merge all replicas' firings — round-robin replicas interleave, so
         the merged stream fires nr-times faster than one replica."""
         workers = self.replica_map.get(stage, [stage])
-        merged = sorted(t for w in workers for t in self.fire_times[w])
-        if len(merged) < 4:
+        merged = [t for w in workers for t in self.fire_times[w]]
+        try:
+            return steady_inverse(merged, warmup_frac)
+        except ValueError:
             raise ValueError(f"too few firings at stage {stage}")
-        k = max(1, int(len(merged) * warmup_frac))
-        window = merged[k:]
-        return (window[-1] - window[0]) / (len(window) - 1)
 
     def utilization(self, worker: str) -> float:
         times = self.fire_times[worker]
@@ -75,11 +80,17 @@ class PipelineRun:
         return min(1.0, self.busy_cycles[worker] / span) if span > 0 else 1.0
 
 
-def execute(stg: STG, sel: Selection, inputs: dict[str, list], *,
+def execute(stg: STG, sel, inputs: dict[str, list], *,
             devices=None, capacity_blocks: int = 2,
             fj: ForkJoinModel = LITERAL, max_firings: int = 1_000_000,
             max_cycles: float = 1e12) -> PipelineRun:
-    """Materialise, place, and stream ``inputs`` through the pipeline."""
+    """Materialise, place, and stream ``inputs`` through the pipeline.
+
+    ``sel`` may be a Selection, a planner PlanResult, or a solver
+    TradeoffResult — materialised through the package-level
+    `as_selection` helper (the same rule the jax path uses)."""
+    from . import as_selection
+    sel = as_selection(sel)
     rg: ReplicatedGraph = materialize(stg, sel, fj)
     pl = place(stg, sel, devices, replica_map=rg.replica_map)
     # Fork/join workers are routing fabric, not pool PEs: each gets its own
@@ -93,13 +104,141 @@ def execute(stg: STG, sel: Selection, inputs: dict[str, list], *,
                                 max_cycles=max_cycles)
 
 
+class _HostNode:
+    """One materialised worker as a virtual-clock `engine.EventProgram`.
+
+    Owns the node-specific halves of the firing rule — token/rate
+    readiness, FORK/JOIN port scheduling, source streams, backpressure
+    probes, and busy-clock updates — while `engine.run_event_loop` owns
+    when anything runs."""
+
+    def __init__(self, name: str, ctx: "_HostContext"):
+        self.name = name
+        self.ctx = ctx
+        g = ctx.g
+        self.node = g.nodes[name]
+        self.impl = ctx.sel.impl_of(g, name)
+        self.in_chs = g.in_channels(name)
+        self.out_chs = g.out_channels(name)
+        self.slice = ctx.pl.slices.get(name)
+
+    def _required_out_ports(self) -> list[int]:
+        if self.node.kind == FORK:
+            return [self.ctx.state[self.name] or 0]
+        return [ch.src_port for ch in self.out_chs]
+
+    def ready_time(self, count_stall: bool = False) -> float | None:
+        """Earliest fire time, or None if blocked on tokens/space.
+
+        ``count_stall``: record a producer stall on the blocking fifo —
+        set only on the heap-pop re-check, so FifoStats counts scheduled
+        firings actually deferred, not readiness probes."""
+        ctx, node, name = self.ctx, self.node, self.name
+        t = ctx.node_free[name]
+        if self.slice is not None:
+            for d in self.slice.devices:
+                t = max(t, ctx.dev_free[d])
+        # inputs
+        if not self.in_chs:   # source: finite stream
+            n_need = node.out_rates[0]
+            if name not in ctx.src_streams or \
+                    ctx.src_pos[name] + n_need > len(ctx.src_streams[name]):
+                return None
+        elif node.kind == JOIN:
+            k = ctx.state[name] or 0
+            q = ctx.cs[self.in_chs[k].key()]
+            rt = q.ready_time(node.in_rates[k])
+            if rt is None:
+                return None
+            t = max(t, rt)
+        else:
+            for ch in self.in_chs:
+                q = ctx.cs[ch.key()]
+                rt = q.ready_time(node.in_rates[ch.dst_port])
+                if rt is None:
+                    return None
+                t = max(t, rt)
+        # backpressure: every port fired into must have block space now
+        need_ports = set(self._required_out_ports())
+        for ch in self.out_chs:
+            if ch.src_port in need_ports:
+                q = ctx.cs[ch.key()]
+                if not q.can_push(node.out_rates[ch.src_port]):
+                    if count_stall:
+                        q.note_stall()
+                    return None
+        return t
+
+    def fire(self, now: float):
+        ctx, node, name = self.ctx, self.node, self.name
+        # -- consume ---------------------------------------------------------
+        ins: list[list] = [[] for _ in range(max(1, node.n_in))]
+        wake: set[str] = set()
+        if self.in_chs:
+            if node.kind == JOIN:
+                k = ctx.state[name] or 0
+                ch = self.in_chs[k]
+                ins[k] = ctx.cs[ch.key()].pop(node.in_rates[k])
+                wake.add(ch.src)
+            else:
+                for ch in self.in_chs:
+                    ins[ch.dst_port] = ctx.cs[ch.key()].pop(
+                        node.in_rates[ch.dst_port])
+                    wake.add(ch.src)
+        else:
+            n_need = node.out_rates[0]
+            p = ctx.src_pos[name]
+            ins[0] = ctx.src_streams[name][p:p + n_need]
+            ctx.src_pos[name] = p + n_need
+        # -- compute ---------------------------------------------------------
+        if node.fn is not None:
+            outs, ctx.state[name] = node.fn(ins, ctx.state[name])
+        elif not self.in_chs:
+            outs = [ins[0]]
+        else:
+            outs = ([list(ins[0]) for _ in range(node.n_out)]
+                    if self.out_chs else [list(ins[0])])
+        # -- produce ---------------------------------------------------------
+        done = now + (self.impl.latency or self.impl.ii)
+        if self.out_chs:
+            for ch in self.out_chs:
+                toks = outs[ch.src_port]
+                if toks:
+                    ctx.cs[ch.key()].push(toks, done)
+                wake.add(ch.dst)
+        else:
+            for port_out in outs:
+                ctx.outputs[name].extend(port_out)
+        ctx.node_free[name] = now + self.impl.ii
+        if self.slice is not None:
+            for d in self.slice.devices:
+                ctx.dev_free[d] = now + self.impl.ii
+                wake.update(ctx.dev_workers[d])
+        return done, self.impl.ii, wake
+
+
+@dataclass
+class _HostContext:
+    """State shared by all of one run's `_HostNode` programs."""
+    g: STG
+    sel: Selection
+    pl: Placement
+    cs: ChannelSet
+    state: dict
+    node_free: dict
+    dev_free: dict
+    dev_workers: dict
+    src_streams: dict
+    src_pos: dict
+    outputs: dict
+
+
 def execute_materialized(rg: ReplicatedGraph, pl: Placement,
                          inputs: dict[str, list], *,
                          capacity_blocks: int = 2,
                          max_firings: int = 1_000_000,
                          max_cycles: float = 1e12) -> PipelineRun:
     g = rg.stg
-    sel = rg.selection
     for n in inputs:
         if n not in g.nodes:
             raise ValueError(f"inputs key {n!r} is not a node of the "
@@ -110,166 +249,36 @@ def execute_materialized(rg: ReplicatedGraph, pl: Placement,
     cs = ChannelSet.for_graph(g, capacity_blocks=capacity_blocks)
     run.channels = cs
 
-    in_chs = {n: g.in_channels(n) for n in g.nodes}
-    out_chs = {n: g.out_channels(n) for n in g.nodes}
-    state = {n: g.nodes[n].init_state for n in g.nodes}
-    node_free = {n: 0.0 for n in g.nodes}
     dev_free: dict = {}
     dev_workers: dict = {}
     for w, sl in pl.slices.items():
         for d in sl.devices:
             dev_free.setdefault(d, 0.0)
             dev_workers.setdefault(d, set()).add(w)
-    src_streams = {n: list(toks) for n, toks in inputs.items()}
-    src_pos = {n: 0 for n in src_streams}
-    for n in g.nodes:
-        run.fired[n] = 0
-        run.fire_times[n] = []
-        run.busy_cycles[n] = 0.0
-        if not out_chs[n]:
-            run.outputs[n] = []
+    ctx = _HostContext(
+        g=g, sel=rg.selection, pl=pl, cs=cs,
+        state={n: g.nodes[n].init_state for n in g.nodes},
+        node_free={n: 0.0 for n in g.nodes},
+        dev_free=dev_free, dev_workers=dev_workers,
+        src_streams={n: list(toks) for n, toks in inputs.items()},
+        src_pos={n: 0 for n in inputs},
+        outputs={n: [] for n in g.nodes if not g.out_channels(n)})
 
-    def required_out_ports(name: str) -> list[int]:
-        node = g.nodes[name]
-        if node.kind == FORK:
-            return [state[name] or 0]
-        return [ch.src_port for ch in out_chs[name]]
-
-    def ready_time(name: str, count_stall: bool = False) -> float | None:
-        """Earliest fire time, or None if blocked on tokens/space.
-
-        ``count_stall``: record a producer stall on the blocking fifo —
-        set only on the heap-pop re-check, so FifoStats counts scheduled
-        firings actually deferred, not readiness probes."""
-        node = g.nodes[name]
-        chans = in_chs[name]
-        sl = pl.slices.get(name)
-        t = node_free[name]
-        if sl is not None:
-            for d in sl.devices:
-                t = max(t, dev_free[d])
-        # inputs
-        if not chans:   # source: finite stream
-            n_need = node.out_rates[0]
-            if name not in src_streams or \
-                    src_pos[name] + n_need > len(src_streams[name]):
-                return None
-        elif node.kind == JOIN:
-            k = state[name] or 0
-            q = cs[chans[k].key()]
-            rt = q.ready_time(node.in_rates[k])
-            if rt is None:
-                return None
-            t = max(t, rt)
-        else:
-            for ch in chans:
-                q = cs[ch.key()]
-                rt = q.ready_time(node.in_rates[ch.dst_port])
-                if rt is None:
-                    return None
-                t = max(t, rt)
-        # backpressure: every port fired into must have block space now
-        need_ports = set(required_out_ports(name))
-        for ch in out_chs[name]:
-            if ch.src_port in need_ports:
-                q = cs[ch.key()]
-                if not q.can_push(g.nodes[name].out_rates[ch.src_port]):
-                    if count_stall:
-                        q.note_stall()
-                    return None
-        return t
-
-    seq = 0
-    heap: list[tuple[float, int, str]] = []
-
-    def push_candidate(name: str) -> None:
-        nonlocal seq
-        t = ready_time(name)
-        if t is not None:
-            heapq.heappush(heap, (t, seq, name))
-            seq += 1
-
-    for n in g.nodes:
-        push_candidate(n)
-
-    total_fired = 0
-    hit_cycle_cap = False
-    while heap and total_fired < max_firings:
-        now, _, name = heapq.heappop(heap)
-        if now > max_cycles:
-            hit_cycle_cap = True
-            break
-        t = ready_time(name, count_stall=True)
-        if t is None:
-            continue            # became blocked; a pop/firing will requeue it
-        if t > now:
-            heapq.heappush(heap, (t, seq, name))
-            seq += 1
-            continue
-        node = g.nodes[name]
-        impl = sel.impl_of(g, name)
-        # -- consume ---------------------------------------------------------
-        ins: list[list] = [[] for _ in range(max(1, node.n_in))]
-        popped_from: list[str] = []
-        if in_chs[name]:
-            if node.kind == JOIN:
-                k = state[name] or 0
-                ch = in_chs[name][k]
-                ins[k] = cs[ch.key()].pop(node.in_rates[k])
-                popped_from.append(ch.src)
-            else:
-                for ch in in_chs[name]:
-                    ins[ch.dst_port] = cs[ch.key()].pop(node.in_rates[ch.dst_port])
-                    popped_from.append(ch.src)
-        else:
-            n_need = node.out_rates[0]
-            p = src_pos[name]
-            ins[0] = src_streams[name][p:p + n_need]
-            src_pos[name] = p + n_need
-        # -- compute ---------------------------------------------------------
-        if node.fn is not None:
-            outs, state[name] = node.fn(ins, state[name])
-        elif not in_chs[name]:
-            outs = [ins[0]]
-        else:
-            outs = ([list(ins[0]) for _ in range(node.n_out)]
-                    if out_chs[name] else [list(ins[0])])
-        # -- produce ---------------------------------------------------------
-        done = now + (impl.latency or impl.ii)
-        if out_chs[name]:
-            for ch in out_chs[name]:
-                toks = outs[ch.src_port]
-                if toks:
-                    cs[ch.key()].push(toks, done)
-        else:
-            for port_out in outs:
-                run.outputs[name].extend(port_out)
-        run.fired[name] += 1
-        run.fire_times[name].append(now)
-        run.busy_cycles[name] += impl.ii
-        total_fired += 1
-        node_free[name] = now + impl.ii
-        sl = pl.slices.get(name)
-        if sl is not None:
-            for d in sl.devices:
-                dev_free[d] = now + impl.ii
-        run.cycles = max(run.cycles, done)
-        # -- wake ups: self, data consumers, space producers, device sharers -
-        cand = {name}
-        cand.update(ch.dst for ch in out_chs[name])
-        cand.update(popped_from)
-        if sl is not None:
-            for d in sl.devices:
-                cand.update(dev_workers[d])
-        for c in cand:
-            push_candidate(c)
+    programs = {n: _HostNode(n, ctx) for n in g.nodes}
+    stats = run_event_loop(programs, max_firings=max_firings,
+                           max_cycles=max_cycles)
+    run.outputs = ctx.outputs
+    run.fire_times = stats.fire_times
+    run.fired = stats.fired
+    run.busy_cycles = stats.busy_cycles
+    run.cycles = stats.cycles
     # wedge guard: the loop ending with a full source block unconsumed means
     # no node could ever fire again (undersized buffer / malformed graph) —
     # fail loudly rather than hand back a silently-truncated stream.  Not a
     # wedge: the caller's own max_firings / max_cycles caps stopped us.
-    if total_fired < max_firings and not hit_cycle_cap:
-        for n, stream in src_streams.items():
-            left = len(stream) - src_pos[n]
+    if stats.total_fired < max_firings and not stats.hit_cycle_cap:
+        for n, stream in ctx.src_streams.items():
+            left = len(stream) - ctx.src_pos[n]
             if left >= g.nodes[n].out_rates[0]:
                 raise RuntimeError(
                     f"pipeline wedged: source {n} has {left} unconsumed "

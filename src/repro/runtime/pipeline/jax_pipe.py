@@ -14,8 +14,15 @@ to stage replicas round-robin (the fork/join routing of
 follows a 1F1B schedule for train shapes or fill-drain streaming for
 serving.  Stage bodies are built from `models/blocks.py`.
 
-Execution is *overlapped* by default (``overlap=True``): the host loop
-never blocks on an op — each firing is handed to a small worker pool that
+The event loop itself lives in the graph-generic executor core
+(`engine.Engine`): this module only defines *stage programs* — per-stage
+dispatch/retire hooks for the embed/block/head forward and backward ops
+(`_LMStageProgram`).  The engine owns FIFO credits, per-edge reorder
+buffers, replica busy budgets, completion timing, and deadlock detection,
+shared with the host interpreter and the decode serving pipeline.
+
+Execution is *overlapped* by default (``overlap=True``): the engine never
+blocks on an op — each firing is handed to a small worker pool that
 dispatches the jax computation and retires it on completion, so a
 replicated stage's microbatches run concurrently across its replica
 slices (measured inverse throughput reads ii/nr, like the interpreter
@@ -45,7 +52,6 @@ consumes *relative* per-stage ratios).
 from __future__ import annotations
 
 import time
-from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 
 import jax
@@ -59,16 +65,17 @@ from ...launch.sharding import ShardingPolicy, stage_param_shardings
 from ...models import blocks
 from ...models.common import KeyGen, dense_init, rmsnorm
 from .channels import Fifo
+from .engine import Engine, Op, steady_inverse
 from .placement import Placement, place
 from .schedule import fill_drain, one_f_one_b
 
 
 def selection_from_plan(plan) -> Selection:
-    """PlanResult -> Selection over the lm_graph node names."""
-    sel = Selection()
-    for sp in plan.stages:
-        sel.set(sp.name, sp.impl, sp.replicas)
-    return sel
+    """PlanResult -> Selection over the lm_graph node names (delegates to
+    the package-level `as_selection`, the single materialisation rule
+    shared with the interpreter path)."""
+    from . import as_selection
+    return as_selection(plan)
 
 
 # ===========================================================================
@@ -173,7 +180,7 @@ def build_lm_stages(cfg: ModelConfig, *, layers_per_stage: int | None = None,
 
 
 # ===========================================================================
-# pipeline assembly + execution
+# result type
 # ===========================================================================
 @dataclass
 class LMPipelineResult:
@@ -196,10 +203,11 @@ class LMPipelineResult:
 
     def stage_inverse_us(self, name: str) -> float:
         """Effective microseconds per forward firing of one stage: the
-        steady-state gap of the stage's merged completion-event stream.
-        Replicas interleave under overlapped dispatch, so a replicated
-        stage reads ii/nr — directly comparable to the analytic plan (and
-        to the interpreter path's ``stage_inverse_throughput``).
+        steady-state gap of the stage's merged completion-event stream
+        (`engine.steady_inverse`).  Replicas interleave under overlapped
+        dispatch, so a replicated stage reads ii/nr — directly comparable
+        to the analytic plan (and to the interpreter path's
+        ``stage_inverse_throughput``).
 
         Runs too short to show a steady state (< 4 forward completions)
         fall back to mean in-flight latency per op — an
@@ -207,14 +215,11 @@ class LMPipelineResult:
         ops *and* dispatch-queue wait (overlapping ops can sum past wall
         time).  ``compare_lm`` skips such stages rather than calibrating
         on the fallback."""
-        ts = sorted(self.stage_done_s.get(name, ()))
-        if len(ts) >= 4:
-            k = max(1, len(ts) // 4)
-            window = ts[k:]
-            if len(window) >= 2 and window[-1] > window[0]:
-                return (window[-1] - window[0]) / (len(window) - 1) * 1e6
-        n = self.stage_firings.get(name, 0)
-        return self.stage_seconds[name] / n * 1e6 if n else float("nan")
+        try:
+            return steady_inverse(self.stage_done_s.get(name, ())) * 1e6
+        except ValueError:
+            n = self.stage_firings.get(name, 0)
+            return self.stage_seconds[name] / n * 1e6 if n else float("nan")
 
     def tokens_per_s(self, toks_per_mb: int) -> float:
         """Steady-state tokens/s from inter-microbatch completion gaps.
@@ -232,17 +237,170 @@ class LMPipelineResult:
         return toks_per_mb * len(self.mb_done_s) / max(self.wall_s, 1e-9)
 
 
-@dataclass
-class _Op:
-    """One dispatched firing, in flight between dispatch and retirement."""
-    s: int
-    kind: str
-    mb: int
-    rep: int
-    t_dispatch: float
-    releases: list = field(default_factory=list)   # (fifo, n) freed at retire
+# ===========================================================================
+# op bodies (run on the engine's dispatch pool under overlap)
+# ===========================================================================
+def _fwd_op(st: LMStage, rep: int, x, train: bool):
+    x = jax.device_put(x, st.x_target(rep))
+    if train:
+        y, vjp = jax.vjp(st.fwd, st.params[rep], x)
+    else:
+        y, vjp = st.fwd(st.params[rep], x), None
+    jax.block_until_ready(y)
+    return y, vjp, time.perf_counter()
 
 
+def _bwd_op(st: LMStage, rep: int, vjp, y_bar, logits, loss_fn):
+    lval = None
+    if logits is not None:            # last stage: seed from loss
+        if loss_fn:
+            lval, y_bar = jax.value_and_grad(loss_fn)(logits)
+        else:
+            y_bar = jnp.ones_like(logits)
+    else:
+        y_bar = jax.device_put(y_bar, st.x_target(rep))
+    p_bar, x_bar = vjp(y_bar)
+    jax.block_until_ready(x_bar)
+    return p_bar, x_bar, lval, time.perf_counter()
+
+
+# ===========================================================================
+# stage program: one pipeline stage's schedule on the shared engine
+# ===========================================================================
+class _LMStageProgram:
+    """Dispatch/retire hooks for one LM stage's scheduled F/B ops.
+
+    Both F and B ops reach each stage in microbatch order, so each
+    inter-stage fifo's head is always the next scheduled microbatch —
+    consumers pop the head directly; out-of-order replica completions are
+    re-sorted by the engine's per-edge reorder buffer.
+    """
+
+    def __init__(self, s: int, pipe: "LMPipeline", ops: list, *,
+                 acts: list, grds: list | None, res: LMPipelineResult,
+                 microbatches: list, train: bool, loss_fn,
+                 grads: dict | None, raw_losses: dict):
+        self.s = s
+        self.S = pipe.n_stages
+        self.st = pipe.stages[s]
+        self.name = self.st.name
+        self.n_replicas = len(self.st.devices)
+        self.ops = ops
+        self.pos = 0
+        self.stall_mark = -1
+        self.acts = acts
+        self.grds = grds
+        self.res = res
+        self.microbatches = microbatches
+        self.train = train
+        self.loss_fn = loss_fn
+        self.grads = grads
+        self.raw_losses = raw_losses
+        self.vjps: dict[int, object] = {}
+        # deterministic grad accumulation: p_bars fold in microbatch order
+        # regardless of which replica retires first
+        self.acc_next = 0
+        self.acc_buf: dict[int, object] = {}
+
+    def pending(self) -> int:
+        return len(self.ops) - self.pos
+
+    def peek(self) -> Op | None:
+        if self.pos >= len(self.ops):
+            return None
+        kind, mb = self.ops[self.pos]
+        return Op(stage=self.s, kind=kind, seq=mb,
+                  rep=mb % self.n_replicas, is_firing=(kind == "F"))
+
+    def ready(self, op: Op) -> bool:
+        """Can this op be dispatched now?  Counts a producer stall the
+        first time a given op is deferred purely by output-buffer
+        backpressure."""
+        s, S, mb = self.s, self.S, op.seq
+        if op.kind == "F":
+            if s > 0 and not self.acts[s - 1].can_pop(1):
+                return False
+            if s < S - 1 and not self.acts[s].can_push(1):
+                if self.stall_mark != self.pos:
+                    self.stall_mark = self.pos
+                    self.acts[s].note_stall()
+                return False              # backpressure: skip this turn
+        else:
+            if mb not in self.vjps:
+                return False              # forward still in flight
+            if s < S - 1 and not self.grds[s].can_pop(1):
+                return False
+            if s > 0 and not self.grds[s - 1].can_push(1):
+                if self.stall_mark != self.pos:
+                    self.stall_mark = self.pos
+                    self.grds[s - 1].note_stall()
+                return False
+        return True
+
+    def dispatch(self, op: Op):
+        s, S, mb, st = self.s, self.S, op.seq, self.st
+        if op.kind == "F":
+            if s == 0:
+                x = self.microbatches[mb]
+            else:
+                mb_got, x = self.acts[s - 1].pop_hold(1)[0]
+                assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
+                op.releases.append((self.acts[s - 1], 1))
+            if s < S - 1:
+                self.acts[s].reserve(1)
+            task = (_fwd_op, (st, op.rep, x, self.train))
+        else:
+            if s == S - 1:
+                logits, y_bar = self.res.outputs[mb], None
+                # release the vocab-sized tensor: 1F1B exists to bound
+                # live activations, so don't hoard logits
+                self.res.outputs[mb] = None
+            else:
+                mb_got, y_bar = self.grds[s].pop_hold(1)[0]
+                assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
+                op.releases.append((self.grds[s], 1))
+                logits = None
+            if s > 0:
+                self.grds[s - 1].reserve(1)
+            task = (_bwd_op, (st, op.rep, self.vjps.pop(mb), y_bar, logits,
+                              self.loss_fn))
+        self.pos += 1
+        return task
+
+    def retire(self, op: Op, result, engine: Engine) -> float:
+        s, S, st = self.s, self.S, self.st
+        if op.kind == "F":
+            y, vjp, t_done = result
+            if self.train:
+                self.vjps[op.seq] = vjp
+            if s < S - 1:
+                engine.ordered_push(self.acts[s], op.seq, y, t_done)
+            else:
+                self.res.outputs[op.seq] = y
+                self.res.mb_done_s.append(t_done - engine.t0)
+        else:
+            p_bar, x_bar, lval, t_done = result
+            if s > 0:
+                engine.ordered_push(self.grds[s - 1], op.seq, x_bar, t_done)
+            if lval is not None:
+                self.raw_losses[op.seq] = lval
+            self.acc_buf[op.seq] = p_bar
+            while self.acc_next in self.acc_buf:
+                pb = self.acc_buf.pop(self.acc_next)
+                self.acc_next += 1
+                pb = jax.device_put(pb, st.grad_target())
+                self.grads[st.name] = (
+                    pb if self.grads[st.name] is None else
+                    jax.tree.map(jnp.add, self.grads[st.name], pb))
+        return t_done
+
+    def describe(self) -> str:
+        return f"{self.name}: {self.pos}/{len(self.ops)}"
+
+
+# ===========================================================================
+# pipeline assembly + execution
+# ===========================================================================
 class LMPipeline:
     """A placed, compiled LM pipeline ready to stream microbatches.
 
@@ -359,6 +517,30 @@ class LMPipeline:
             outs.append(x)
         return outs
 
+    def _edge_fifo(self, producer: LMStage, consumer: LMStage,
+                   overlap: bool) -> Fifo:
+        # a slot is occupied from producer *dispatch* (reservation) to
+        # consumer *retirement* (hold release), so both endpoints' full
+        # in-flight complements must fit alongside the buffered tokens:
+        # nr x replica_queue reservations on the producer side (else a
+        # replicated producer serialises its own replicas on output
+        # slots), nr x replica_queue holds on the consumer side, plus
+        # ``capacity_blocks`` actually-queued tokens of slack between
+        # them — the knob keeps its double-buffering meaning
+        nrep = len(consumer.devices)
+
+        def staging(tok):
+            mb, y = tok
+            return (mb, jax.device_put(y, consumer.x_target(mb % nrep)))
+
+        slots = (len(producer.devices) + len(consumer.devices)) \
+            * self.replica_queue
+        return Fifo(block=1, capacity_blocks=self.capacity_blocks,
+                    min_capacity=self.capacity_blocks + slots,
+                    prefetch_fn=staging if overlap else None,
+                    prefetch_depth=self.prefetch_blocks
+                    * len(consumer.devices) * self.replica_queue)
+
     def run(self, microbatches: list, *, train: bool = False,
             loss_fn=None, overlap: bool | None = None) -> LMPipelineResult:
         """Stream microbatches through the pipeline.
@@ -370,241 +552,37 @@ class LMPipeline:
         ``loss_fn(logits) -> scalar`` seeds the backward (defaults to
         sum-of-logits).  ``overlap`` overrides the pipeline-level knob for
         this run (the benchmark's A/B switch).
-
-        Both F and B ops reach each stage in microbatch order, so each
-        inter-stage fifo's head is always the next scheduled microbatch —
-        consumers pop the head directly, no reordering map needed.
         """
         overlap = self.overlap if overlap is None else overlap
         n_micro = len(microbatches)
         S = self.n_stages
         sched = one_f_one_b(S, n_micro) if train else fill_drain(S, n_micro)
-        pos = [0] * S                              # next op index per stage
 
-        def _staging(consumer: LMStage):
-            nrep = len(consumer.devices)
-
-            def fn(tok):
-                mb, y = tok
-                return (mb, jax.device_put(y, consumer.x_target(mb % nrep)))
-            return fn
-
-        def _edge_fifo(producer: LMStage, consumer: LMStage) -> Fifo:
-            # a slot is occupied from producer *dispatch* (reservation) to
-            # consumer *retirement* (hold release), so both endpoints' full
-            # in-flight complements must fit alongside the buffered tokens:
-            # nr x replica_queue reservations on the producer side (else a
-            # replicated producer serialises its own replicas on output
-            # slots), nr x replica_queue holds on the consumer side, plus
-            # ``capacity_blocks`` actually-queued tokens of slack between
-            # them — the knob keeps its double-buffering meaning
-            slots = (len(producer.devices) + len(consumer.devices)) \
-                * self.replica_queue
-            return Fifo(block=1, capacity_blocks=self.capacity_blocks,
-                        min_capacity=self.capacity_blocks + slots,
-                        prefetch_fn=_staging(consumer) if overlap else None,
-                        prefetch_depth=self.prefetch_blocks
-                        * len(consumer.devices) * self.replica_queue)
-
-        acts = [_edge_fifo(self.stages[s], self.stages[s + 1])
+        acts = [self._edge_fifo(self.stages[s], self.stages[s + 1], overlap)
                 for s in range(S - 1)]             # s -> s+1 activations
-        grds = [_edge_fifo(self.stages[s + 1], self.stages[s])
+        grds = [self._edge_fifo(self.stages[s + 1], self.stages[s], overlap)
                 for s in range(S - 1)] if train else None
-        vjps: list[dict[int, object]] = [dict() for _ in range(S)]
         res = LMPipelineResult(outputs=[None] * n_micro,
                                placement=self.placement)
-        for st in self.stages:
-            res.stage_seconds[st.name] = 0.0
-            res.stage_firings[st.name] = 0
-            res.stage_done_s[st.name] = []
         grads = {st.name: None for st in self.stages} if train else None
-        # deterministic grad accumulation: p_bars fold in microbatch order
-        # regardless of which replica retires first
-        acc_next = [0] * S
-        acc_buf: list[dict[int, object]] = [dict() for _ in range(S)]
         raw_losses: dict[int, object] = {}
 
-        # Completion events arrive out of order (concurrent replicas), but
-        # each edge's consumer pops in microbatch order — stage the pushes
-        # through a per-edge reorder buffer so the fifo stays mb-sorted.
-        # Slots were reserved at dispatch, so deferred pushes cannot
-        # overflow.
-        reorder: dict[int, tuple[dict, list]] = {}
+        programs = [
+            _LMStageProgram(s, self, sched[s], acts=acts, grds=grds,
+                            res=res, microbatches=microbatches, train=train,
+                            loss_fn=loss_fn, grads=grads,
+                            raw_losses=raw_losses)
+            for s in range(S)]
+        engine = Engine(programs, overlap=overlap,
+                        workers=self._n_workers(),
+                        replica_queue=self.replica_queue)
+        er = engine.run()
+        res.stage_seconds = er.stage_seconds
+        res.stage_firings = er.stage_firings
+        res.stage_done_s = er.stage_done_s
+        res.op_trace = er.op_trace
+        res.max_inflight = er.max_inflight
 
-        def ordered_push(fifo: Fifo, mb: int, tok, t_done: float) -> None:
-            pend, nxt = reorder.setdefault(id(fifo), ({}, [0]))
-            pend[mb] = (tok, t_done)
-            while nxt[0] in pend:
-                tok_i, t_i = pend.pop(nxt[0])
-                fifo.push_reserved([(nxt[0], tok_i)], t_i)
-                nxt[0] += 1
-
-        def ready(s: int) -> bool:
-            """Can stage s's next scheduled op be dispatched now?  Counts a
-            producer stall the first time a given op is deferred purely by
-            output-buffer backpressure."""
-            if pos[s] >= len(sched[s]):
-                return False
-            kind, mb = sched[s][pos[s]]
-            # a replica is one worker with a short device queue: at most
-            # ``replica_queue`` ops in flight.  Depth 1 = strict serial
-            # worker (firings space at the service interval — the cleanest
-            # ii/nr measurement); depth 2 (default) keeps the next firing
-            # queued behind the current one so host dispatch gaps hide
-            # inside device compute.
-            if busy[s][mb % len(self.stages[s].devices)] >= self.replica_queue:
-                return False
-            if kind == "F":
-                if s > 0 and not acts[s - 1].can_pop(1):
-                    return False
-                if s < S - 1 and not acts[s].can_push(1):
-                    if stall_mark[s] != pos[s]:
-                        stall_mark[s] = pos[s]
-                        acts[s].note_stall()
-                    return False              # backpressure: skip this turn
-            else:
-                if mb not in vjps[s]:
-                    return False              # forward still in flight
-                if s < S - 1 and not grds[s].can_pop(1):
-                    return False
-                if s > 0 and not grds[s - 1].can_push(1):
-                    if stall_mark[s] != pos[s]:
-                        stall_mark[s] = pos[s]
-                        grds[s - 1].note_stall()
-                    return False
-            return True
-
-        stall_mark = [-1] * S
-        busy = [[0] * len(st.devices) for st in self.stages]
-
-        # -- op bodies (run on the dispatch pool under overlap) -------------
-        def fwd_op(st: LMStage, rep: int, x):
-            x = jax.device_put(x, st.x_target(rep))
-            if train:
-                y, vjp = jax.vjp(st.fwd, st.params[rep], x)
-            else:
-                y, vjp = st.fwd(st.params[rep], x), None
-            jax.block_until_ready(y)
-            return y, vjp, time.perf_counter()
-
-        def bwd_op(st: LMStage, rep: int, vjp, y_bar, logits):
-            lval = None
-            if logits is not None:            # last stage: seed from loss
-                if loss_fn:
-                    lval, y_bar = jax.value_and_grad(loss_fn)(logits)
-                else:
-                    y_bar = jnp.ones_like(logits)
-            else:
-                y_bar = jax.device_put(y_bar, st.x_target(rep))
-            p_bar, x_bar = vjp(y_bar)
-            jax.block_until_ready(x_bar)
-            return p_bar, x_bar, lval, time.perf_counter()
-
-        def dispatch(s: int):
-            kind, mb = sched[s][pos[s]]
-            st = self.stages[s]
-            rep = mb % len(st.devices)
-            op = _Op(s=s, kind=kind, mb=mb, rep=rep,
-                     t_dispatch=time.perf_counter())
-            if kind == "F":
-                if s == 0:
-                    x = microbatches[mb]
-                else:
-                    mb_got, x = acts[s - 1].pop_hold(1)[0]
-                    assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
-                    op.releases.append((acts[s - 1], 1))
-                if s < S - 1:
-                    acts[s].reserve(1)
-                task = (fwd_op, (st, rep, x))
-            else:
-                if s == S - 1:
-                    logits, y_bar = res.outputs[mb], None
-                    # release the vocab-sized tensor: 1F1B exists to
-                    # bound live activations, so don't hoard logits
-                    res.outputs[mb] = None
-                else:
-                    mb_got, y_bar = grds[s].pop_hold(1)[0]
-                    assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
-                    op.releases.append((grds[s], 1))
-                    logits = None
-                if s > 0:
-                    grds[s - 1].reserve(1)
-                task = (bwd_op, (st, rep, vjps[s].pop(mb), y_bar, logits))
-            pos[s] += 1
-            busy[s][rep] += 1
-            return op, task
-
-        def retire(op: _Op, result, t0: float):
-            st = self.stages[op.s]
-            if op.kind == "F":
-                y, vjp, t_done = result
-                if train:
-                    vjps[op.s][op.mb] = vjp
-                if op.s < S - 1:
-                    ordered_push(acts[op.s], op.mb, y, t_done)
-                else:
-                    res.outputs[op.mb] = y
-                    res.mb_done_s.append(t_done - t0)
-            else:
-                p_bar, x_bar, lval, t_done = result
-                if op.s > 0:
-                    ordered_push(grds[op.s - 1], op.mb, x_bar, t_done)
-                if lval is not None:
-                    raw_losses[op.mb] = lval
-                acc_buf[op.s][op.mb] = p_bar
-                while acc_next[op.s] in acc_buf[op.s]:
-                    pb = acc_buf[op.s].pop(acc_next[op.s])
-                    acc_next[op.s] += 1
-                    pb = jax.device_put(pb, st.grad_target())
-                    grads[st.name] = (pb if grads[st.name] is None else
-                                      jax.tree.map(jnp.add,
-                                                   grads[st.name], pb))
-            for fifo, n in op.releases:
-                fifo.release(n)
-            busy[op.s][op.rep] -= 1
-            if op.kind == "F":
-                res.stage_done_s[st.name].append(t_done - t0)
-            res.stage_seconds[st.name] += t_done - op.t_dispatch
-            res.stage_firings[st.name] += 1
-            res.op_trace.append((st.name, op.kind, op.mb, op.rep,
-                                 op.t_dispatch - t0, t_done - t0))
-
-        t0 = time.perf_counter()
-        remaining = sum(len(ops) for ops in sched)
-        inflight: dict = {}                    # future -> _Op
-        pool = ThreadPoolExecutor(max_workers=self._n_workers()) \
-            if overlap else None
-        try:
-            while remaining or inflight:
-                progressed = False
-                # downstream-first: consumers drain fifos before producers
-                for s in reversed(range(S)):
-                    if not ready(s):
-                        continue
-                    op, (fn, args) = dispatch(s)
-                    remaining -= 1
-                    progressed = True
-                    if pool is None:
-                        retire(op, fn(*args), t0)
-                    else:
-                        inflight[pool.submit(fn, *args)] = op
-                        res.max_inflight = max(res.max_inflight,
-                                               len(inflight))
-                done = [f for f in inflight if f.done()]
-                if not progressed and not done and inflight:
-                    done, _ = wait(list(inflight),
-                                   return_when=FIRST_COMPLETED)
-                for f in done:
-                    retire(inflight.pop(f), f.result(), t0)
-                    progressed = True
-                if not progressed:
-                    raise RuntimeError(
-                        f"pipeline deadlock: pos={pos} of "
-                        f"{[len(o) for o in sched]} — "
-                        f"schedule/backpressure bug")
-        finally:
-            if pool is not None:
-                pool.shutdown(wait=True)
         # drain the async tail before reading the wall clock
         jax.block_until_ready([o for o in res.outputs if o is not None])
         if grads is not None:
@@ -612,7 +590,7 @@ class LMPipeline:
                                    if g is not None])
         res.losses = {mb: float(v) for mb, v in sorted(raw_losses.items())}
         res.mb_done_s.sort()
-        res.wall_s = time.perf_counter() - t0
+        res.wall_s = time.perf_counter() - engine.t0
         res.grads = grads
         for s in range(S - 1):
             res.fifo_stats[("act", s)] = acts[s].stats

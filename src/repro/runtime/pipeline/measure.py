@@ -1,23 +1,31 @@
 """Measurement layer: measured vs analytic throughput, and replan feedback.
 
 Closes the paper's loop: the solver promises an application inverse
-throughput (Eq. 1/5/6 via `core/throughput.analyze`); the executor
-(`interpreter.py` / `jax_pipe.py`) measures what the pipeline actually
-sustains.  ``compare()`` (interpreter runs) and ``compare_lm()`` (jax
-runs) line the two up per stage; ``calibrate()`` scales each node's
-implementation library by its measured/analytic ratio; and
-``measured_replan()`` re-runs the solver on the calibrated graph — the
-measurement-guided re-planning step that turns a one-shot analytic plan
-into a feedback loop (plan -> run -> measure -> replan).  Both executor
-paths are calibration sources: the overlapped jax executor dispatches a
-stage's replicas concurrently and measures completion-event streams, so
-its per-stage ratios carry the same ii/nr semantics as the interpreter's
-(`planner.replan(measured_ratio=report.ratios())` consumes either).
+throughput (Eq. 1/5/6 via `core/throughput.analyze`); the executors
+measure what the pipeline actually sustains.  Every executor backend
+(interpreter, jax LM pipeline, decode serving pipeline) runs on the
+graph-generic engine core and therefore emits the same measurement
+surface — per-stage streams of completion/firing times whose steady-state
+gap is the stage's effective inverse throughput (ii/nr for replicated
+stages).  One report builder (`_build_report`) lines measured values up
+against the analytic model for all of them; ``compare()`` (virtual-clock
+interpreter runs) and ``compare_lm()`` (wall-clock jax runs) are thin
+unit adapters over it, not separate comparison logics.
+
+``calibrate()`` scales each node's implementation library by its
+measured/analytic ratio; ``measured_replan()`` re-runs the solver once on
+the calibrated graph; and ``replan_to_fixed_point()`` iterates the whole
+loop — plan -> run -> measure -> replan — to a fixed point with geometric
+damping and an oscillation guard (a measured-slow stage gains replicas,
+which changes what is measured, which changes the plan ...; undamped, the
+solver can flip between two selections forever).
 """
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass, field
+from typing import Callable
 
 from ...core import heuristic, ilp
 from ...core.fork_join import LITERAL, ForkJoinModel
@@ -88,52 +96,92 @@ class PipelineReport:
                 f"{self.fifo_stalls} fifo stalls\n" + "\n".join(rows))
 
 
-def compare(stg: STG, sel: Selection, run: PipelineRun,
-            warmup_frac: float = 0.25) -> PipelineReport:
-    """Per-stage measured-vs-analytic report for one executed pipeline.
-
-    ``stg``/``sel`` are the *logical* graph and selection the plan was made
-    for; ``run`` is the executor's result on the materialised graph.
-    """
+# ===========================================================================
+# one comparison core for every engine backend
+# ===========================================================================
+def _build_report(stg: STG, sel: Selection, *,
+                  measured_of: Callable[[str], float | None],
+                  firings_of: Callable[[str], int],
+                  util_of: Callable[[str], float],
+                  fifo_stalls: int, oversubscription: float,
+                  skip_kinds: tuple = (),
+                  err_noun: str = "firings",
+                  err_hint: Callable[[dict], str] = lambda counts: "") \
+        -> PipelineReport:
+    """Line one executed run's measured per-stage inverse throughput up
+    against the analytic model — the single comparison rule for every
+    engine backend.  ``measured_of`` returns a stage's steady-state
+    measured value or None (no steady state yet; the stage is skipped
+    rather than calibrated on a degraded sample)."""
     a = analyze(stg, sel)
     q = stg.repetition_vector()
     rep = PipelineReport(
         v_app_analytic=a.v_app,
         bottleneck_analytic=a.bottleneck,
-        fifo_stalls=run.channels.total_stalls() if run.channels else 0,
-        oversubscription=(run.placement.oversubscription
-                          if run.placement else 1.0))
+        fifo_stalls=fifo_stalls,
+        oversubscription=oversubscription)
     worst_v, worst_stage = 0.0, None
     firings: dict[str, int] = {}
     for name in stg.nodes:
-        workers = run.replica_map.get(name, [name])
+        if stg.nodes[name].kind in skip_kinds:
+            continue
+        firings[name] = firings_of(name)
+        measured = measured_of(name)
+        if measured is None:
+            continue            # too few firings to call steady state
         nr = sel.replicas(name)
         impl = sel.impl_of(stg, name)
-        firings[name] = sum(len(run.fire_times.get(w, ())) for w in workers)
-        try:
-            measured = run.stage_inverse_throughput(name, warmup_frac)
-        except (ValueError, KeyError):
-            continue            # too few firings to call steady state
-        util = (sum(run.utilization(w) for w in workers) / len(workers)
-                if workers else 0.0)
-        m = StageMeasurement(stage=name, analytic_v=impl.ii / nr,
-                             measured_v=measured, replicas=nr,
-                             utilization=util)
-        rep.stages[name] = m
+        rep.stages[name] = StageMeasurement(
+            stage=name, analytic_v=impl.ii / nr, measured_v=measured,
+            replicas=nr, utilization=util_of(name))
         # normalise to graph iterations for the app-level number
         v_iter = measured * q[name]
         if v_iter > worst_v:
             worst_v, worst_stage = v_iter, name
     if worst_stage is None:
         counts = ", ".join(f"{n}: {c}" for n, c in sorted(firings.items()))
-        shortfall = max(4 - c for c in firings.values()) if firings else 4
         raise ValueError(
-            f"no stage reached steady state (need >= 4 firings per stage; "
-            f"got {counts}) — stream at least {shortfall} more "
-            f"iteration(s) of tokens before measuring")
+            f"no stage reached steady state (need >= 4 {err_noun} per "
+            f"stage; got {counts}){err_hint(firings)}")
     rep.v_app_measured = worst_v
     rep.bottleneck_measured = worst_stage
     return rep
+
+
+def compare(stg: STG, sel: Selection, run: PipelineRun,
+            warmup_frac: float = 0.25) -> PipelineReport:
+    """Per-stage measured-vs-analytic report for one interpreter run.
+
+    ``stg``/``sel`` are the *logical* graph and selection the plan was made
+    for; ``run`` is the executor's result on the materialised graph.
+    """
+    def measured_of(name: str) -> float | None:
+        try:
+            return run.stage_inverse_throughput(name, warmup_frac)
+        except (ValueError, KeyError):
+            return None
+
+    def firings_of(name: str) -> int:
+        workers = run.replica_map.get(name, [name])
+        return sum(len(run.fire_times.get(w, ())) for w in workers)
+
+    def util_of(name: str) -> float:
+        workers = run.replica_map.get(name, [name])
+        return (sum(run.utilization(w) for w in workers) / len(workers)
+                if workers else 0.0)
+
+    def hint(firings: dict) -> str:
+        shortfall = max(4 - c for c in firings.values()) if firings else 4
+        return (f" — stream at least {shortfall} more iteration(s) of "
+                f"tokens before measuring")
+
+    return _build_report(
+        stg, sel, measured_of=measured_of, firings_of=firings_of,
+        util_of=util_of,
+        fifo_stalls=run.channels.total_stalls() if run.channels else 0,
+        oversubscription=(run.placement.oversubscription
+                          if run.placement else 1.0),
+        err_noun="firings", err_hint=hint)
 
 
 def compare_lm(stg: STG, sel: Selection, res,
@@ -151,44 +199,32 @@ def compare_lm(stg: STG, sel: Selection, res,
     ``stage_map`` maps graph node -> executed stage name when stages were
     fused (``layers_per_stage > 1``); identity by default.
     """
-    a = analyze(stg, sel)
-    q = stg.repetition_vector()
-    rep = PipelineReport(
-        v_app_analytic=a.v_app,
-        bottleneck_analytic=a.bottleneck,
+    def exec_name(name: str) -> str:
+        return (stage_map or {}).get(name, name)
+
+    def measured_of(name: str) -> float | None:
+        if firings_of(name) < 4:
+            return None
+        v = res.stage_inverse_us(exec_name(name))
+        return None if v != v else v            # nan: never fired
+
+    def firings_of(name: str) -> int:
+        return len(res.stage_done_s.get(exec_name(name), ()))
+
+    def util_of_nr(name: str) -> float:
+        busy = res.stage_seconds.get(exec_name(name), 0.0)
+        nr = sel.replicas(name)
+        return min(1.0, busy / (res.wall_s * nr)) if res.wall_s > 0 else 0.0
+
+    return _build_report(
+        stg, sel, measured_of=measured_of, firings_of=firings_of,
+        util_of=util_of_nr,
         fifo_stalls=sum(s.producer_stalls for s in res.fifo_stats.values()),
         oversubscription=(res.placement.oversubscription
-                          if res.placement else 1.0))
-    worst_v, worst_stage = 0.0, None
-    firings: dict[str, int] = {}
-    for name in stg.nodes:
-        node = stg.nodes[name]
-        if node.kind in (SOURCE, SINK):
-            continue
-        exec_name = (stage_map or {}).get(name, name)
-        firings[name] = len(res.stage_done_s.get(exec_name, ()))
-        measured = res.stage_inverse_us(exec_name)
-        if firings[name] < 4 or measured != measured:   # nan: never fired
-            continue
-        nr = sel.replicas(name)
-        impl = sel.impl_of(stg, name)
-        busy = res.stage_seconds.get(exec_name, 0.0)
-        util = min(1.0, busy / (res.wall_s * nr)) if res.wall_s > 0 else 0.0
-        rep.stages[name] = StageMeasurement(
-            stage=name, analytic_v=impl.ii / nr, measured_v=measured,
-            replicas=nr, utilization=util)
-        v_iter = measured * q[name]
-        if v_iter > worst_v:
-            worst_v, worst_stage = v_iter, name
-    if worst_stage is None:
-        counts = ", ".join(f"{n}: {c}" for n, c in sorted(firings.items()))
-        raise ValueError(
-            f"no stage reached steady state (need >= 4 completions per "
-            f"stage; got {counts}) — stream more microbatches before "
-            f"measuring")
-    rep.v_app_measured = worst_v
-    rep.bottleneck_measured = worst_stage
-    return rep
+                          if res.placement else 1.0),
+        skip_kinds=(SOURCE, SINK),
+        err_noun="completions",
+        err_hint=lambda _: " — stream more microbatches before measuring")
 
 
 def calibrate(stg: STG, ratios: dict[str, float],
@@ -228,3 +264,120 @@ def measured_replan(stg: STG, report: PipelineReport, *,
     if v_tgt is not None:
         return eng.min_area(g, v_tgt, fj)
     return eng.max_throughput(g, area_budget, fj)
+
+
+# ===========================================================================
+# measured-replan convergence loop
+# ===========================================================================
+@dataclass
+class FixedPointStep:
+    iteration: int
+    selection: dict                 # node -> (impl, nr) at this step
+    scale: dict[str, float]         # cumulative calibration applied
+    measured: dict[str, float]      # ratios the run reported (vs original)
+    residual: float                 # max |log(measured / scale)| this step
+    total_area: float
+    v_app: float
+
+
+@dataclass
+class FixedPointResult:
+    result: object                  # the final engine TradeoffResult
+    iterations: int
+    converged: bool
+    oscillated: bool                # a selection cycle was detected
+    scale: dict[str, float]         # final per-node calibration
+    history: list[FixedPointStep] = field(default_factory=list)
+
+    @property
+    def selection(self) -> Selection:
+        return self.result.selection
+
+
+def replan_to_fixed_point(stg: STG, run_fn, *,
+                          v_tgt: float | None = None,
+                          area_budget: float | None = None,
+                          fj: ForkJoinModel = LITERAL,
+                          engine: str = "heuristic",
+                          max_iters: int = 10, damping: float = 0.5,
+                          damping_floor: float = 0.1) -> FixedPointResult:
+    """Iterate plan -> run -> measure -> replan to a fixed point.
+
+    ``measured_replan`` is one feedback step; this is the loop.  Each
+    iteration solves the trade-off on the ``scale``-calibrated graph,
+    executes the chosen selection via ``run_fn(selection) ->
+    dict[node, measured/analytic ratio]`` (or a `PipelineReport`, whose
+    ``ratios()`` is used; ratios are vs the ORIGINAL graph's analytic
+    model), and folds the measurement into the calibration with
+    *geometric damping*:
+
+        scale <- scale^(1-a) * measured^a        (a = ``damping``)
+
+    ``damping=1`` is the undamped jump straight to the measured ratio —
+    which oscillates whenever the measured ratio is itself a function of
+    the selection (a stage measured slow at nr=1 gains a replica, then
+    measures fast, loses it again, forever); damping keeps the memory of
+    earlier measurements, so the calibration settles inside the band
+    where the solver's choice is stable.  The **oscillation guard**
+    detects a repeated non-consecutive selection, halves the damping, and
+    continues; if the cycle persists at ``damping_floor`` the loop stops
+    and returns the best (lowest measured bottleneck-v) selection seen,
+    flagged ``oscillated=True`` — never an infinite loop.
+
+    Converged when the solver returns the same selection twice in a row —
+    the fixed point of the plan -> run -> replan map is a *plan* the
+    re-solve reproduces (per-node log-residuals are recorded in
+    ``history`` for anyone polishing the calibration further).
+    """
+    if (v_tgt is None) == (area_budget is None):
+        raise ValueError("pass exactly one of v_tgt= / area_budget=")
+    eng = {"ilp": ilp, "heuristic": heuristic}[engine]
+
+    def solve(g):
+        return (eng.min_area(g, v_tgt, fj) if v_tgt is not None
+                else eng.max_throughput(g, area_budget, fj))
+
+    scale = {n: 1.0 for n in stg.nodes}
+    alpha = min(1.0, max(damping, 0.0))
+    history: list[FixedPointStep] = []
+    seen: dict[tuple, int] = {}            # selection key -> iteration
+    prev_key = None
+    best = None                            # (v_app, result, scale snapshot)
+    res = None
+    converged = oscillated = False
+
+    for it in range(max_iters):
+        res = solve(calibrate(stg, scale))
+        key = tuple(sorted(res.selection.choices.items()))
+        measured = run_fn(res.selection)
+        if hasattr(measured, "ratios"):
+            measured = measured.ratios()
+        measured = {n: r for n, r in measured.items()
+                    if stg.nodes[n].kind not in (SOURCE, SINK)}
+        residual = max((abs(math.log(max(r, 1e-9) / scale[n]))
+                        for n, r in measured.items()), default=0.0)
+        history.append(FixedPointStep(
+            iteration=it, selection=dict(res.selection.choices),
+            scale=dict(scale), measured=dict(measured), residual=residual,
+            total_area=res.total_area, v_app=res.v_app))
+        if best is None or res.v_app < best[0]:
+            best = (res.v_app, res, dict(scale))
+        if key == prev_key:
+            converged = True
+            break
+        if key in seen:
+            # revisited an earlier selection (an adjacent repeat already
+            # returned converged above): we are cycling.  Damp harder;
+            # below the floor, stop with the best seen.
+            oscillated = True
+            alpha = alpha / 2
+            if alpha < damping_floor:
+                _, res, scale = best
+                break
+        seen[key] = it
+        prev_key = key
+        for n, r in measured.items():
+            scale[n] = scale[n] ** (1 - alpha) * max(r, 1e-9) ** alpha
+    return FixedPointResult(result=res, iterations=len(history),
+                            converged=converged, oscillated=oscillated,
+                            scale=scale, history=history)

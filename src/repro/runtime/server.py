@@ -6,6 +6,18 @@ caches, then jitted single-token decode steps run until every slot hits
 EOS or its token budget.  Prompt lengths are bucketed to powers of two so
 the prefill compiles once per bucket, not once per request mix.
 
+Two backends:
+
+  * **single-device** (default): one jitted prefill + decode loop over the
+    whole model, rounds served sequentially.
+  * **pipelined** (``pipeline=runtime.pipeline.DecodePipeline(...)``):
+    rounds become serving-slot *groups* streamed concurrently through a
+    planned, placed, replicated stage pipeline — per-stage KV-cache
+    slices stay resident on their placement slices and sampled tokens
+    feed back over a continuous token-stream channel.  Completions are
+    token-identical to the single-device backend under greedy sampling
+    (same grouping, bucketing, and EOS/budget bookkeeping).
+
 Throughput accounting distinguishes prefill tokens (prompt side) from
 decode tokens (generated) — the two shapes the dry-run cells
 (``prefill_32k`` / ``decode_32k``) lower at production scale.
@@ -72,12 +84,17 @@ def _bucket(n: int, lo: int = 16) -> int:
 class LMServer:
     def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
                  eos_id: int = 1, params=None, seed: int = 0,
-                 mesh=None, temperature: float = 0.0):
+                 mesh=None, temperature: float = 0.0, pipeline=None):
+        """``pipeline``: a `runtime.pipeline.DecodePipeline` — when set,
+        ``serve``/``serve_round`` stream request groups through it instead
+        of the single-device prefill/decode loop.  Build it with the same
+        ``seed`` (or pass the server's ``params``) for token parity."""
         self.cfg = cfg
         self.max_batch = max_batch
         self.eos_id = eos_id
         self.temperature = temperature
         self.mesh = mesh
+        self.pipeline = pipeline
         self.model = build_model(cfg)
         self.params = params if params is not None \
             else self.model.init(jax.random.PRNGKey(seed))
@@ -97,6 +114,8 @@ class LMServer:
             sub, logits[:, -1, :] / self.temperature, axis=-1).astype(jnp.int32)
 
     def serve_round(self, reqs: list[Request]) -> list[Completion]:
+        if self.pipeline is not None:
+            return self._serve_pipelined(reqs)
         assert 0 < len(reqs) <= self.max_batch
         B = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
@@ -149,13 +168,54 @@ class LMServer:
                 for i, r in enumerate(reqs)]
 
     def serve(self, reqs: list[Request]) -> list[Completion]:
-        """Drain a queue in max_batch-sized rounds."""
+        """Drain a queue in max_batch-sized rounds.  The pipelined backend
+        streams *all* rounds concurrently through the stage pipeline (each
+        round = one serving-slot group); the single-device backend serves
+        them sequentially."""
+        if self.pipeline is not None:
+            return self._serve_pipelined(reqs)
         out: list[Completion] = []
         for i in range(0, len(reqs), self.max_batch):
             ctx = sctx.activate(sctx.from_mesh(self.mesh)) if self.mesh \
                 else _null()
             with ctx:
                 out.extend(self.serve_round(reqs[i:i + self.max_batch]))
+        return out
+
+    def _serve_pipelined(self, reqs: list[Request]) -> list[Completion]:
+        """Stream request groups through the decode pipeline.
+
+        Per-completion prefill/decode times are the group's pipeline spans
+        (dispatch -> first sampled token -> last token).  Aggregate stats
+        use run-level wall windows — groups overlap in the pipeline, so
+        summing per-group spans would double-count time."""
+        if not reqs:
+            return []          # match the single-device backend on an
+        #                        empty queue instead of raising
+        run = self.pipeline.serve(
+            [r.prompt for r in reqs], [r.max_new for r in reqs],
+            eos_id=self.eos_id, group_size=self.max_batch,
+            temperature=self.temperature)
+        self.stats.requests += len(reqs)
+        self.stats.rounds += len(run.groups)
+        self.stats.prefill_tokens += run.prefill_tokens
+        self.stats.decode_tokens += run.decode_tokens
+        # wall windows (they overlap under pipelining): prefill counts
+        # until the LAST group's prefill lands — interleaved decode makes
+        # the reported prefill rate a lower bound, never an inflated one
+        first_prefill = min(g.t_prefill_done for g in run.groups)
+        self.stats.prefill_s += max(g.t_prefill_done for g in run.groups)
+        self.stats.decode_s += max(
+            max(g.t_last for g in run.groups) - first_prefill, 0.0)
+        for g in run.groups:
+            self.stats.compiles.add((g.batch, g.bucket, g.cap))
+        out: list[Completion] = []
+        for i, (r, toks) in enumerate(zip(reqs, run.tokens)):
+            g = run.groups[run.group_of[i]]
+            out.append(Completion(
+                uid=r.uid, tokens=toks, prompt_len=len(r.prompt),
+                prefill_s=g.t_prefill_done - g.t_start,
+                decode_s=max(g.t_last - g.t_prefill_done, 0.0)))
         return out
 
 

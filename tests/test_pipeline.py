@@ -26,9 +26,11 @@ from repro.core.stg import STG, Impl, Node, Selection, unit_rate_node
 from repro.core.throughput import analyze
 from repro.graphs import jpeg, streamit
 from repro.runtime.pipeline import (Fifo, LMPipeline, LMPipelineResult,
-                                    compare, compare_lm, execute, fill_drain,
-                                    fill_drain_bubble, max_live_activations,
-                                    measured_replan, one_f_one_b, place,
+                                    as_selection, compare, compare_lm,
+                                    execute, fill_drain, fill_drain_bubble,
+                                    max_live_activations, measured_replan,
+                                    one_f_one_b, place,
+                                    replan_to_fixed_point,
                                     selection_from_plan, tp_of)
 
 N_BLOCKS = 192
@@ -119,6 +121,53 @@ def test_fifo_two_level_credits():
         f.release(5)
     with pytest.raises(OverflowError):
         f.push_reserved([1], 0.0)     # nothing reserved
+
+
+def test_fifo_credit_invariants_under_consumer_exceptions():
+    """reserve/push_reserved/pop_hold/release must leave no leaked slots
+    across repeated consumer failures: every abort path releases its hold
+    and the channel keeps full capacity (no creeping deadlock)."""
+    f = Fifo(block=1, capacity_blocks=2)
+    for cycle in range(50):
+        f.reserve(1)
+        f.push_reserved([cycle], 0.0)
+        got = f.pop_hold(1)
+        assert got == [cycle]
+        try:
+            raise RuntimeError("consumer body failed")
+        except RuntimeError:
+            f.release(1)                 # the executor's abort path
+    assert f.free == f.capacity == 2
+    assert f.inflight_slots == 0
+    # occupancy never exceeded one in-flight token at a time
+    assert f.stats.inflight_high_water == 1
+    # and the channel still works end to end after all those aborts
+    f.reserve(2)
+    f.push_reserved([98, 99], 1.0)
+    assert f.pop(2) == [98, 99]
+
+
+def test_fifo_prefetch_failure_leaves_queue_consistent():
+    """A raising prefetch_fn (failed device transfer) propagates, but the
+    channel stays consistent: nothing dropped or duplicated, no slot
+    accounting moved, the un-staged token still pops, and later prefetch
+    retries resume."""
+    failed = []
+
+    def flaky(tok):
+        if tok == "bad" and not failed:
+            failed.append(tok)
+            raise ValueError("transfer failed")
+        return ("staged", tok)
+
+    f = Fifo(block=1, capacity_blocks=4, prefetch_fn=flaky, prefetch_depth=2)
+    with pytest.raises(ValueError, match="transfer failed"):
+        f.push(["bad", "ok"], 0.0)
+    assert len(f) == 2 and f.free == 2       # push landed, no leak
+    # the failing token pops raw; the pop's window advance stages the rest
+    assert f.pop(1) == ["bad"]
+    assert f.pop(1) == [("staged", "ok")]
+    assert f.free == 4
 
 
 def test_fifo_prefetch_stages_head_tokens():
@@ -264,6 +313,111 @@ def test_measured_replan_adds_replicas_for_slow_stage(jpeg_graph, jpeg_blocks):
     # replanned capacity on the measured-slow stage strictly grows
     assert res.selection.choices["dct"] != base.selection.choices["dct"] or \
         res.total_area > base.total_area
+
+
+def _fixed_point_graph():
+    g = STG()
+    g.add_node(Node("src", impls=(Impl("s", 0, 1e-9),), kind="source"))
+    g.add_node(unit_rate_node("a", [Impl("v1", 1, 3.0)]))
+    g.add_node(unit_rate_node("b", [Impl("v1", 1, 1.0)]))
+    g.add_node(Node("out", impls=(Impl("t", 0, 1e-9),), kind="sink"))
+    g.connect("src", "a"); g.connect("a", "b"); g.connect("b", "out")
+    return g
+
+
+def _flappy_run_fn(sel):
+    """Stage ``a`` measures slow single-replica and fast replicated — the
+    classic measured-replan oscillator: at v_tgt=3.9 the undamped loop
+    calibrates to 2.0, adds a replica, calibrates to 1.25, removes it,
+    forever (the switch threshold is scale = 3.9/3 = 1.3)."""
+    return {"a": 2.0 if sel.replicas("a") == 1 else 1.25, "b": 1.0}
+
+
+def test_replan_to_fixed_point_oscillates_without_damping():
+    g = _fixed_point_graph()
+    res = replan_to_fixed_point(g, _flappy_run_fn, v_tgt=3.9, fj=LITERAL,
+                                damping=1.0, max_iters=10)
+    assert res.oscillated                 # the guard caught the cycle
+    assert res.iterations <= 10           # ... and terminated
+    # the first three undamped selections flip 1 -> 2 -> 1 replicas
+    flips = [h.selection["a"][1] for h in res.history[:3]]
+    assert flips == [1, 2, 1]
+
+
+def test_replan_to_fixed_point_converges_with_damping():
+    g = _fixed_point_graph()
+    res = replan_to_fixed_point(g, _flappy_run_fn, v_tgt=3.9, fj=LITERAL,
+                                damping=0.5, max_iters=10)
+    assert res.converged and not res.oscillated
+    # geometric damping keeps the memory of the slow measurement, so the
+    # calibration settles above the flip threshold: a keeps its replica
+    assert res.selection.choices["a"][1] == 2
+    assert res.iterations <= 4
+    assert res.history[-1].residual >= 0
+
+
+def test_max_throughput_survives_uniform_calibration():
+    """Near-uniform measured ratios (the wall-clock-vs-roofline scale
+    every host measurement produces) put all tp1 IIs in one 0.5% bucket;
+    the bisection's candidate clustering must keep that bucket's largest
+    target or the all-smallest operating point vanishes and a fitting
+    budget solves infeasible."""
+    from repro.configs.base import ShapeCfg
+    from repro.configs.tiny import CONFIG as tiny
+    from repro.core import planner
+    shape = ShapeCfg("decode_cal", 64, 16, "decode")
+    plan = planner.plan(tiny, shape, chips=8, max_tp=4)
+    ratios = {s.name: 1e4 * (1.0 + 0.002 * i)       # ~0.2% spread
+              for i, s in enumerate(plan.stages)}
+    new, _ = planner.replan(tiny, shape, plan, new_chips=8,
+                            measured_ratio=ratios, max_tp=4)
+    assert new.feasible
+    assert new.total_chips <= 8
+
+
+def test_max_throughput_cluster_anchor_does_not_drift():
+    """Candidates spaced just under the 0.5% bucket width must not chain
+    into one mega-bucket: the bucket anchor is its first member, so a
+    geometric ladder keeps ~one operating point per bucket width."""
+    g = STG()
+    g.add_node(Node("src", impls=(Impl("s", 0, 1e-9),), kind="source"))
+    # impl IIs form a 1.004-ratio ladder spanning ~1.5x
+    impls = [Impl(f"v{k}", area=1 + k, ii=100.0 * 1.004 ** k)
+             for k in range(100)]
+    g.add_node(unit_rate_node("a", impls))
+    g.add_node(Node("out", impls=(Impl("t", 0, 1e-9),), kind="sink"))
+    g.connect("src", "a"); g.connect("a", "out")
+    res = heuristic.max_throughput(g, 1.0, LITERAL)   # only nr=1 area-1 fits
+    assert res.feasible
+    # the cheapest impl is the slowest rung; a drifted mega-bucket would
+    # leave only far-apart targets and still find v0 here, so assert the
+    # candidate grid kept fine structure by hitting the exact optimum
+    assert res.selection.choices["a"] == ("v0", 1)
+    assert res.v_app == pytest.approx(100.0)
+
+
+def test_replan_to_fixed_point_validates_modes():
+    g = _fixed_point_graph()
+    with pytest.raises(ValueError, match="exactly one"):
+        replan_to_fixed_point(g, _flappy_run_fn, fj=LITERAL)
+
+
+def test_as_selection_accepts_all_plan_shapes():
+    """One materialisation rule: Selection passthrough, TradeoffResult
+    .selection, PlanResult per-stage choices."""
+    g = _fixed_point_graph()
+    sel = Selection.fastest(g)
+    assert as_selection(sel) is sel
+    res = heuristic.min_area(g, 8, LITERAL)
+    assert as_selection(res) is res.selection
+    from repro.configs.base import ShapeCfg
+    from repro.configs.tiny import CONFIG as tiny
+    from repro.core import planner
+    plan = planner.plan(tiny, ShapeCfg("pipe_test", 16, 8, "train"),
+                        chips=16, max_tp=4)
+    sel2 = as_selection(plan)
+    assert sel2.choices == selection_from_plan(plan).choices
+    assert set(sel2.choices) == {s.name for s in plan.stages}
 
 
 def test_report_json_roundtrip(jpeg_graph, jpeg_blocks):
