@@ -3,9 +3,18 @@
 For each workload: solve the trade-off, execute the plan as a real
 pipeline (`runtime.pipeline`), and report the plan's promised inverse
 throughput against what the pipeline sustained — as a table and as JSON
-(the CI artifact consumed by regression tooling).
+(the CI artifact consumed by regression tooling).  The schedule rows A/B
+plain 1F1B against interleaved 1F1B under the virtual-clock driver
+(`schedule.simulate_schedule`): measured bubble fraction vs the
+`schedule.interleaved_bubble` analytic ceiling, on the same physical
+stage count and per-microbatch work.
+
+``--smoke`` runs the fast subset (interpreter + schedule rows, no jax
+pipeline) — the PR-CI mode that keeps schedule regressions visible in
+BENCH_pipeline.json without paying for the full sweep.
 
     PYTHONPATH=src python -m benchmarks.bench_pipeline [--json out.json]
+                                                       [--smoke]
 """
 from __future__ import annotations
 
@@ -127,14 +136,50 @@ def _lm_rows():
     }]
 
 
-def run(verbose: bool = True, json_path: str | None = None) -> list[dict]:
-    rows = _jpeg_rows() + _streamit_rows() + _lm_rows()
+def _schedule_rows(n_micro: int = 16):
+    """1F1B vs interleaved bubble A/B under the virtual clock: same
+    physical stage count, same per-microbatch work per stage (plain ops
+    cost v chunk-units; interleaved ops cost 1), measured against the
+    `schedule.interleaved_bubble` analytic ceilings."""
+    from repro.runtime.pipeline import (interleaved_1f1b, interleaved_bubble,
+                                        one_f_one_b, simulate_schedule)
+
+    rows = []
+    for p, v in ((4, 2), (4, 4), (8, 2)):
+        m = n_micro if n_micro % p == 0 else p * max(1, n_micro // p)
+        plain = simulate_schedule(one_f_one_b(p, m), f_cost=float(v))
+        ilv = simulate_schedule(interleaved_1f1b(p, m, v))
+        rows.append({
+            "workload": f"schedule/p{p}_m{m}_v{v}",
+            "path": "virtual",
+            "bubble_1f1b": plain.bubble,
+            "bubble_1f1b_ceiling": interleaved_bubble(p, m, 1),
+            "bubble_interleaved": ilv.bubble,
+            "bubble_interleaved_ceiling": interleaved_bubble(p, m, v),
+            "interleaved_wins": ilv.bubble < plain.bubble,
+            "makespan_1f1b": plain.makespan,
+            "makespan_interleaved": ilv.makespan,
+        })
+    return rows
+
+
+def run(verbose: bool = True, json_path: str | None = None,
+        smoke: bool = False) -> list[dict]:
+    rows = _jpeg_rows() + _schedule_rows()
+    if not smoke:
+        rows += _streamit_rows() + _lm_rows()
     if verbose:
         for r in rows:
             if r["path"] == "interpreter":
                 print(f"{r['workload']:24s} planned v={r['v_planned']:8.3f} "
                       f"measured v={r['v_measured']:8.3f} "
                       f"(x{r['accuracy']:.3f})  bottleneck={r['bottleneck']}")
+            elif r["path"] == "virtual":
+                print(f"{r['workload']:24s} bubble 1f1b "
+                      f"{100 * r['bubble_1f1b']:.1f}% (ceiling "
+                      f"{100 * r['bubble_1f1b_ceiling']:.1f}%) | interleaved "
+                      f"{100 * r['bubble_interleaved']:.1f}% (ceiling "
+                      f"{100 * r['bubble_interleaved_ceiling']:.1f}%)")
             else:
                 print(f"{r['workload']:24s} planned {r['planned_tokens_per_s']:,.0f} tok/s "
                       f"(v5e) | measured {r['measured_tokens_per_s']:,.0f} tok/s (host) | "
@@ -156,6 +201,6 @@ if __name__ == "__main__":
     if "--json" in sys.argv:
         i = sys.argv.index("--json") + 1
         if i >= len(sys.argv):
-            sys.exit("usage: bench_pipeline [--json PATH]")
+            sys.exit("usage: bench_pipeline [--json PATH] [--smoke]")
         path = sys.argv[i]
-    run(verbose=True, json_path=path)
+    run(verbose=True, json_path=path, smoke="--smoke" in sys.argv)

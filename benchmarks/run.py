@@ -3,11 +3,13 @@
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table2 roofline
     PYTHONPATH=src python -m benchmarks.run pipeline --json-dir artifacts
+    PYTHONPATH=src python -m benchmarks.run pipeline --smoke --json-dir a
 
 ``--json-dir DIR`` writes each bench's rows to ``DIR/BENCH_<name>.json``
 (benches whose runners return rows / accept ``json_path``).  CI uploads
 the directory as an artifact so the perf trajectory accumulates run over
-run instead of living only in job logs.
+run instead of living only in job logs.  ``--smoke`` forwards to benches
+whose runners accept it (fast PR-CI subsets; others run in full).
 """
 from __future__ import annotations
 
@@ -32,12 +34,15 @@ BENCHES = [
 ]
 
 
-def _invoke(fn, name: str, json_dir: str | None):
+def _invoke(fn, name: str, json_dir: str | None, smoke: bool = False):
     """Run one bench; route rows to BENCH_<name>.json when a dir is set."""
     kwargs = {"verbose": True}
+    params = inspect.signature(fn).parameters
+    if smoke and "smoke" in params:
+        kwargs["smoke"] = True
     json_path = (os.path.join(json_dir, f"BENCH_{name}.json")
                  if json_dir else None)
-    if json_path and "json_path" in inspect.signature(fn).parameters:
+    if json_path and "json_path" in params:
         kwargs["json_path"] = json_path
         json_path = None                   # the bench writes it itself
     out = fn(**kwargs)
@@ -58,6 +63,9 @@ def _invoke(fn, name: str, json_dir: str | None):
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     json_dir = None
+    smoke = "--smoke" in argv
+    if smoke:
+        argv = [a for a in argv if a != "--smoke"]
     if "--json-dir" in argv:
         i = argv.index("--json-dir")
         if i + 1 >= len(argv):
@@ -77,7 +85,7 @@ def main(argv=None) -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=[fn_name])
-            _invoke(getattr(mod, fn_name), name, json_dir)
+            _invoke(getattr(mod, fn_name), name, json_dir, smoke)
             print(f"[{name}: {time.perf_counter()-t0:.1f}s]")
         except Exception as e:
             failures.append((name, repr(e)))

@@ -9,12 +9,18 @@ Layers (see README §runtime/pipeline):
                 with backpressure; capacity bounds in-flight work;
                 `StreamChannel` adds open-ended token streams (decode
                 feedback traffic)
-  engine      — the graph-generic executor core: one wall-clock
-                asynchronous scheduler (`Engine` + `StageProgram`) and one
-                virtual-clock discrete-event loop (`run_event_loop` +
-                `EventProgram`), owning FIFO credits, reorder buffers,
-                replica busy budgets, completion timing, and deadlock
-                detection for every backend
+  engine      — the graph-generic executor core: ONE `Program` protocol
+                (op streams with ready/dispatch/retire semantics) and two
+                drivers of it — the wall-clock asynchronous scheduler
+                (`Engine`) and the virtual-clock discrete-event loop
+                (`run_event_loop`) — owning FIFO credits, reorder
+                buffers, replica busy budgets, completion timing, and
+                deadlock diagnostics for every backend
+  schedule    — schedules as first-class plan objects (`Schedule` /
+                `SchedOp`): `fill_drain`, `one_f_one_b`,
+                `interleaved_1f1b(p, m, v)` with analytic bubble models,
+                plus `simulate_schedule` — the schedule executed as data
+                under the virtual-clock driver
   backends    — `interpreter` (host/numpy, any functional STG),
                 `jax_pipe` (device-to-device LM microbatch pipeline,
                 overlapped async dispatch, 1F1B), and `decode`
@@ -51,29 +57,37 @@ def as_selection(plan):
 
 
 from .channels import ChannelSet, Fifo, FifoStats, StreamChannel
-from .engine import (Engine, EngineResult, EventLoopStats, Op, StageProgram,
-                     run_event_loop, steady_inverse)
+from .engine import (Driver, Engine, EngineResult, EventLoop, EventLoopStats,
+                     Op, Program, StageProgram, run_event_loop,
+                     steady_inverse)
+from .schedule import (SchedOp, Schedule, ScheduleProgram, ScheduleRun,
+                       fill_drain, fill_drain_bubble, interleaved_1f1b,
+                       interleaved_bubble, max_live_activations,
+                       max_live_by_chunk, one_f_one_b, schedule_programs,
+                       simulate_schedule)
 from .interpreter import PipelineRun, execute, execute_materialized
 from .jax_pipe import (LMPipeline, LMPipelineResult, build_lm_stages,
                        selection_from_plan)
 from .decode import DecodePipeline, ServeRunResult
 from .measure import (FixedPointResult, PipelineReport, StageMeasurement,
-                      calibrate, compare, compare_lm, measured_replan,
-                      replan_to_fixed_point)
+                      calibrate, compare, compare_lm, measured_bubble,
+                      measured_replan, replan_to_fixed_point)
 from .placement import Placement, StageSlice, place, tp_of
-from .schedule import (fill_drain, fill_drain_bubble, max_live_activations,
-                       one_f_one_b)
 
 __all__ = [
     "as_selection",
     "ChannelSet", "Fifo", "FifoStats", "StreamChannel",
-    "Engine", "EngineResult", "EventLoopStats", "Op", "StageProgram",
-    "run_event_loop", "steady_inverse",
+    "Driver", "Engine", "EngineResult", "EventLoop", "EventLoopStats", "Op",
+    "Program", "StageProgram", "run_event_loop", "steady_inverse",
+    "SchedOp", "Schedule", "ScheduleProgram", "ScheduleRun",
+    "fill_drain", "fill_drain_bubble", "interleaved_1f1b",
+    "interleaved_bubble", "max_live_activations", "max_live_by_chunk",
+    "one_f_one_b", "schedule_programs", "simulate_schedule",
     "PipelineRun", "execute", "execute_materialized",
     "LMPipeline", "LMPipelineResult", "build_lm_stages", "selection_from_plan",
     "DecodePipeline", "ServeRunResult",
     "FixedPointResult", "PipelineReport", "StageMeasurement", "calibrate",
-    "compare", "compare_lm", "measured_replan", "replan_to_fixed_point",
+    "compare", "compare_lm", "measured_bubble", "measured_replan",
+    "replan_to_fixed_point",
     "Placement", "StageSlice", "place", "tp_of",
-    "fill_drain", "fill_drain_bubble", "max_live_activations", "one_f_one_b",
 ]

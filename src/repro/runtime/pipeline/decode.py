@@ -49,7 +49,7 @@ from ...models import blocks, lm
 from ...models.common import dtype_of, rmsnorm
 from ..server import _bucket            # one bucketing rule: token parity
 from .channels import Fifo, StreamChannel
-from .engine import Engine, EngineResult, Op
+from .engine import Engine, EngineResult, Op, describe_position
 from .placement import Placement, place
 
 
@@ -203,20 +203,20 @@ class _ServeStageProgram:
         return Op(stage=self.s, kind=kind, seq=seq,
                   rep=gid % self.n_replicas)
 
-    def ready(self, op: Op) -> bool:
+    def ready(self, op: Op, count_stall: bool = False) -> float | None:
         s, S, run = self.s, self.S, self.run
         if s > 0 and not run.acts[s - 1].can_pop(1):
-            return False
+            return None
         if s == 0 and op.kind == "D" and not run.feedback.can_pop(1):
-            return False
+            return None
         if s < S - 1 and not run.acts[s].can_push(1):
             if self.stall_mark != self.pos_i:
                 self.stall_mark = self.pos_i
                 run.acts[s].note_stall()
-            return False
-        return True
+            return None
+        return 0.0
 
-    def dispatch(self, op: Op):
+    def dispatch(self, op: Op, driver):
         s, S, run, pipe = self.s, self.S, self.run, self.pipe
         kind, gid, seq, pos = self.queue[self.pos_i]
         self.pos_i += 1
@@ -269,7 +269,9 @@ class _ServeStageProgram:
         return t_done
 
     def describe(self) -> str:
-        return f"{self.name}: {self.pos_i}/{len(self.queue)}"
+        return describe_position(
+            self.name, self.pos_i, self.queue,
+            lambda q: f"{q[0]}(gid={q[1]},seq={q[2]})")
 
 
 def _run_stage(fn, params, args, dev):

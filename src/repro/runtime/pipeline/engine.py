@@ -1,38 +1,44 @@
-"""Graph-generic executor core: one scheduler, many stage-program backends.
+"""Graph-generic executor core: one Program protocol, two clock drivers.
 
-The streaming executors used to carry their own event loops — `jax_pipe`
-had a 150-line non-blocking dispatch/retire loop and `interpreter` a
-discrete-event heap — duplicating the parts that are actually
-graph-generic: FIFO credit accounting, per-edge reorder buffers, per-op
-completion timing, replica busy budgets, and deadlock/wedge detection.
-This module owns those parts once, in two clock domains:
+The streaming executors used to carry their own event loops — and then
+their own *protocols*: the wall-clock `Engine` drove a ``StageProgram``
+while the virtual-clock loop drove a separate ``EventProgram``, so a
+backend was written against one clock domain and stuck there.  This
+module owns one **`Program`** protocol and two drivers of it:
+
+  * A `Program` is an op stream with ``ready``/``dispatch``/``retire``
+    semantics: ``peek`` exposes the next scheduled `Op`, ``ready``
+    answers *when* it could run (a timestamp under the virtual clock,
+    any non-None under the wall clock; ``None`` = blocked on
+    tokens/credits), ``dispatch`` consumes inputs, reserves output
+    credits, and returns a thunk, and ``retire`` pushes outputs and
+    returns the op's completion timestamp.  The driver owns *when*; the
+    program owns *what*.  Op queues may grow while a driver runs
+    (decode schedules ops as sampled tokens stream back), so wall-clock
+    termination is pending-or-inflight, not a precomputed op count.
 
   * **`Engine`** (wall clock) — the asynchronous overlapped scheduler.
-    A `StageProgram` per pipeline stage exposes dispatch/retire/readiness
-    hooks; the engine scans programs downstream-first, hands dispatched
-    ops to a worker pool (or runs them inline under ``overlap=False``),
-    retires them on completion events, releases their channel credits,
-    and records the completion-time streams the measurement layer reads.
-    Backends: `jax_pipe.LMPipeline` (microbatch F/B over jax devices) and
-    `decode.DecodePipeline` (prefill/decode serving with KV-cache
-    residency and a token feedback stream).  Programs may *grow* their op
-    queues while the engine runs (decode steps are scheduled as sampled
-    tokens stream back), so termination is pending-or-inflight, not a
-    precomputed op count.
+    Scans programs downstream-first, hands dispatched ops to a worker
+    pool (or runs them inline under ``overlap=False``), retires them on
+    completion events, releases channel credits (also on failure — no
+    leaked slots), and records completion-time streams.  Backends:
+    `jax_pipe.LMPipeline` (microbatch F/B over jax devices) and
+    `decode.DecodePipeline` (prefill/decode serving).
 
-  * **`run_event_loop`** (virtual clock) — the discrete-event driver the
-    host interpreter runs on.  An `EventProgram` per materialised node
-    exposes ``ready_time``/``fire``; the loop owns the heap, candidate
-    re-queueing, wake-set propagation, and the firing/cycle caps.  Node
-    semantics (rates, FORK/JOIN state, source streams, device busy
-    clocks) stay in the backend — the loop never inspects tokens.
+  * **`run_event_loop`** (virtual clock) — the discrete-event driver.
+    Owns the heap, candidate re-queueing, wake-set propagation, and the
+    firing/cycle caps; programs own rates, busy clocks, and token
+    semantics.  Backends: the host interpreter's per-node programs and
+    `schedule.ScheduleProgram` (schedules simulated as data).
 
-Both domains emit the same measurement surface: per-stage streams of
-completion (or firing) times whose steady-state gap is the stage's
-measured inverse throughput (`steady_inverse`).  A replicated stage's
-streams merge, so the measured value reads ii/nr in either domain — one
-`measure.compare` core serves every executor instead of special-casing
-the two runs.
+Both drivers extend one `Driver` base — per-edge reorder buffers
+(`ordered_push`), wake hooks, busy accounting — so a program written
+once runs under either clock (`schedule.ScheduleProgram` is the tested
+example).  Both emit the same measurement surface: per-stage streams of
+completion/firing times whose steady-state gap is the stage's measured
+inverse throughput (`steady_inverse`); a replicated stage's streams
+merge, so the measured value reads ii/nr in either domain — one
+`measure.compare` core serves every executor.
 """
 from __future__ import annotations
 
@@ -61,20 +67,23 @@ def steady_inverse(samples: Iterable[float], warmup_frac: float = 0.25,
 
 
 # ===========================================================================
-# wall-clock domain: asynchronous overlapped scheduler
+# the one protocol
 # ===========================================================================
 @dataclass
 class Op:
     """One dispatched firing, in flight between dispatch and retirement.
 
     ``seq`` orders the op on every edge it crosses (microbatch index for
-    LM pipelines, global stream index for decode); ``releases`` lists
-    (fifo, n) credits the engine frees at retirement — also on *failed*
-    ops, so a raising stage body cannot leak channel slots."""
+    LM pipelines, global stream index for decode); ``chunk`` is the
+    virtual-stage index for interleaved schedules (0 for plain ones);
+    ``releases`` lists (fifo, n) credits the driver frees at retirement —
+    also on *failed* ops, so a raising stage body cannot leak channel
+    slots."""
     stage: int
     kind: str
     seq: int
     rep: int
+    chunk: int = 0
     t_dispatch: float = 0.0
     releases: list = field(default_factory=list)       # (Fifo, n)
     is_firing: bool = True       # contributes to the stage's completion
@@ -82,30 +91,80 @@ class Op:
 
 
 @runtime_checkable
-class StageProgram(Protocol):
-    """Per-stage hooks the wall-clock engine drives.
+class Program(Protocol):
+    """The one per-stage interface both clock domains drive.
 
-    The engine owns *when*; the program owns *what*: which op comes next
-    (``peek``), whether its data/credits are available (``ready`` — claim
-    nothing, count producer stalls), how to run it (``dispatch`` —
-    consume inputs, reserve output credits, return a thunk safe to run on
-    a worker thread), and what its completion means (``retire`` — push
-    outputs via ``engine.ordered_push``, return the op's completion
-    timestamp)."""
+    The driver owns *when*; the program owns *what*: which op comes next
+    (``peek``), when its data/credits allow it to run (``ready`` — claim
+    nothing; return the earliest feasible time under a virtual clock,
+    any non-None under the wall clock, None when blocked;
+    ``count_stall`` marks re-checks where a deferral is a real producer
+    stall, not a readiness probe), how to run it (``dispatch`` — consume
+    inputs, reserve output credits, return a thunk safe to run on a
+    worker thread), and what its completion means (``retire`` — push
+    outputs via ``driver.ordered_push``, return the op's completion
+    timestamp).  ``describe`` is the deadlock/wedge diagnostic: it names
+    the stage's schedule position — next op index and (kind, mb, chunk)
+    — so a stall points at the schedule line, not just a FIFO."""
 
     name: str
     n_replicas: int
 
     def pending(self) -> int: ...
     def peek(self) -> Op | None: ...
-    def ready(self, op: Op) -> bool: ...
-    def dispatch(self, op: Op) -> tuple[Callable, tuple]: ...
-    def retire(self, op: Op, result: Any, engine: "Engine") -> float: ...
-
-    def describe(self) -> str:              # deadlock diagnostics
-        ...
+    def ready(self, op: Op, count_stall: bool = False) -> float | None: ...
+    def dispatch(self, op: Op, driver: "Driver") -> tuple[Callable, tuple]: ...
+    def retire(self, op: Op, result: Any, driver: "Driver") -> float: ...
+    def describe(self) -> str: ...
 
 
+# the historical name for wall-clock programs; same protocol now
+StageProgram = Program
+
+
+def describe_position(name: str, pos: int, ops, fmt: Callable) -> str:
+    """The shared ``Program.describe`` diagnostic line: a stage's schedule
+    position — next op index and the op itself (``fmt``-rendered) — so
+    every backend's deadlock/wedge report points at the same place."""
+    if pos >= len(ops):
+        return f"{name}: done {pos}/{len(ops)}"
+    return f"{name}: op {pos}/{len(ops)} next={fmt(ops[pos])}"
+
+
+class Driver:
+    """What every clock domain offers its programs: per-edge reorder
+    buffers (slots are reserved at dispatch, so deferred pushes cannot
+    overflow, and each fifo stays seq-sorted no matter which replica
+    retires first), wake hooks (virtual domain: which programs to
+    re-examine after a retirement; wall domain: a no-op — the engine
+    rescans every sweep), and busy accounting."""
+
+    virtual: bool = False
+
+    def __init__(self):
+        self._reorder: dict[int, tuple[dict, list]] = {}
+        self.t0 = 0.0
+
+    def ordered_push(self, fifo: Fifo, seq: int, tok, t_done: float) -> None:
+        """Stage an out-of-order completion so ``fifo`` receives tokens in
+        seq order (slots were reserved at dispatch; cannot overflow)."""
+        pend, nxt = self._reorder.setdefault(id(fifo), ({}, [0]))
+        pend[seq] = (tok, t_done)
+        while nxt[0] in pend:
+            tok_i, t_i = pend.pop(nxt[0])
+            fifo.push_reserved([(nxt[0], tok_i)], t_i)
+            nxt[0] += 1
+
+    def wake(self, *names: str) -> None:
+        pass
+
+    def note_busy(self, name: str, amount: float) -> None:
+        pass
+
+
+# ===========================================================================
+# wall-clock driver: asynchronous overlapped scheduler
+# ===========================================================================
 @dataclass
 class EngineResult:
     """The generic half of an execution's result: per-stage timing streams
@@ -132,42 +191,28 @@ class EngineResult:
                     if n else float("nan"))
 
 
-class Engine:
-    """Non-blocking scheduler over a list of `StageProgram`s.
+class Engine(Driver):
+    """Wall-clock driver: non-blocking scheduler over a list of `Program`s.
 
     ``overlap=True`` hands dispatched ops to a thread pool and retires
     them on completion; ``overlap=False`` is the serial A/B baseline
     (dispatch, block, advance).  ``replica_queue`` caps in-flight ops per
     stage replica (1 = strict serial worker, 2 = short device queue).
-    The engine owns the per-edge reorder buffers (`ordered_push`): slots
-    are reserved at dispatch, so deferred pushes cannot overflow, and
-    each fifo stays seq-sorted no matter which replica retires first.
     """
 
     def __init__(self, programs: list, *, overlap: bool = True,
                  workers: int = 8, replica_queue: int = 2):
+        super().__init__()
         self.programs = list(programs)
         self.overlap = overlap
         self.workers = max(1, workers)
         self.replica_queue = max(1, replica_queue)
         self.result = EngineResult()
-        self.t0 = 0.0
         self._busy = [[0] * max(1, p.n_replicas) for p in self.programs]
-        self._reorder: dict[int, tuple[dict, list]] = {}
         for p in self.programs:
             self.result.stage_seconds[p.name] = 0.0
             self.result.stage_firings[p.name] = 0
             self.result.stage_done_s[p.name] = []
-
-    def ordered_push(self, fifo: Fifo, seq: int, tok, t_done: float) -> None:
-        """Stage an out-of-order completion so ``fifo`` receives tokens in
-        seq order (slots were reserved at dispatch; cannot overflow)."""
-        pend, nxt = self._reorder.setdefault(id(fifo), ({}, [0]))
-        pend[seq] = (tok, t_done)
-        while nxt[0] in pend:
-            tok_i, t_i = pend.pop(nxt[0])
-            fifo.push_reserved([(nxt[0], tok_i)], t_i)
-            nxt[0] += 1
 
     def _retire(self, op: Op, result) -> None:
         prog = self.programs[op.stage]
@@ -209,9 +254,9 @@ class Engine:
                         continue
                     if self._busy[s][op.rep] >= self.replica_queue:
                         continue
-                    if not prog.ready(op):
+                    if prog.ready(op) is None:
                         continue
-                    fn, args = prog.dispatch(op)
+                    fn, args = prog.dispatch(op, self)
                     op.t_dispatch = time.perf_counter()
                     self._busy[s][op.rep] += 1
                     progressed = True
@@ -253,25 +298,8 @@ class Engine:
 
 
 # ===========================================================================
-# virtual-clock domain: discrete-event loop (host interpreter backend)
+# virtual-clock driver: discrete-event loop
 # ===========================================================================
-@runtime_checkable
-class EventProgram(Protocol):
-    """One materialised node driven by the virtual-clock loop.
-
-    ``ready_time`` returns the earliest virtual time the node could fire
-    (None = blocked on tokens/space; ``count_stall`` marks the heap-pop
-    re-check, where a deferral is a real producer stall, not a readiness
-    probe).  ``fire`` consumes/computes/produces at ``now`` and returns
-    (done_time, busy_cycles, wake) — the nodes whose readiness may have
-    changed."""
-
-    name: str
-
-    def ready_time(self, count_stall: bool = False) -> float | None: ...
-    def fire(self, now: float) -> tuple[float, float, Iterable[str]]: ...
-
-
 @dataclass
 class EventLoopStats:
     fire_times: dict[str, list[float]] = field(default_factory=dict)
@@ -282,53 +310,96 @@ class EventLoopStats:
     hit_cycle_cap: bool = False
 
 
-def run_event_loop(programs: dict[str, EventProgram], *,
+class EventLoop(Driver):
+    """Virtual-clock driver of the same `Program` protocol.
+
+    Deterministic: among fireable programs the earliest (t, insertion
+    seq) fires.  A popped candidate is re-checked (it may have been
+    blocked by an earlier firing) and either fires, re-queues at its new
+    ready time, or is dropped — a wake from a later retirement re-queues
+    it.  Programs call ``driver.wake(names...)`` in ``retire`` to name
+    whose readiness may have changed, read ``driver.now`` for the firing
+    time, and report ``driver.note_busy`` cycles for the utilisation
+    stats."""
+
+    virtual = True
+
+    def __init__(self, programs: dict[str, Program]):
+        super().__init__()
+        self.programs = dict(programs)
+        self.now = 0.0
+        self._wake: set[str] = set()
+
+    def wake(self, *names: str) -> None:
+        self._wake.update(names)
+
+    def note_busy(self, name: str, amount: float) -> None:
+        self.stats.busy_cycles[name] += amount
+
+    def run(self, *, max_firings: int = 1_000_000,
+            max_cycles: float = 1e12) -> EventLoopStats:
+        programs = self.programs
+        self.stats = stats = EventLoopStats()
+        for n in programs:
+            stats.fire_times[n] = []
+            stats.fired[n] = 0
+            stats.busy_cycles[n] = 0.0
+
+        seq = 0
+        heap: list[tuple[float, int, str]] = []
+
+        def push_candidate(name: str) -> None:
+            nonlocal seq
+            prog = programs[name]
+            op = prog.peek()
+            if op is None:
+                return
+            t = prog.ready(op)
+            if t is not None:
+                heapq.heappush(heap, (t, seq, name))
+                seq += 1
+
+        for n in programs:
+            push_candidate(n)
+
+        while heap and stats.total_fired < max_firings:
+            now, _, name = heapq.heappop(heap)
+            if now > max_cycles:
+                stats.hit_cycle_cap = True
+                break
+            prog = programs[name]
+            op = prog.peek()
+            if op is None:
+                continue        # completed since queueing
+            t = prog.ready(op, count_stall=True)
+            if t is None:
+                continue        # became blocked; a wake requeues it
+            if t > now:
+                heapq.heappush(heap, (t, seq, name))
+                seq += 1
+                continue
+            self.now = now
+            self._wake = set()
+            fn, args = prog.dispatch(op, self)
+            op.t_dispatch = now
+            result = fn(*args)
+            done = prog.retire(op, result, self)
+            for fifo, n_rel in op.releases:
+                fifo.release(n_rel)
+            stats.fired[name] += 1
+            stats.fire_times[name].append(now)
+            stats.total_fired += 1
+            stats.cycles = max(stats.cycles, done)
+            for c in self._wake | {name}:
+                if c in programs:
+                    push_candidate(c)
+        return stats
+
+
+def run_event_loop(programs: dict[str, Program], *,
                    max_firings: int = 1_000_000,
                    max_cycles: float = 1e12) -> EventLoopStats:
-    """Drive `EventProgram`s to quiescence under a virtual clock.
-
-    Deterministic: among fireable nodes the earliest (t, insertion seq)
-    fires.  A popped candidate is re-checked (it may have been blocked by
-    an earlier firing) and either fires, re-queues at its new ready time,
-    or is dropped — a later pop/firing of a waker re-queues it.
-    """
-    stats = EventLoopStats()
-    for n in programs:
-        stats.fire_times[n] = []
-        stats.fired[n] = 0
-        stats.busy_cycles[n] = 0.0
-
-    seq = 0
-    heap: list[tuple[float, int, str]] = []
-
-    def push_candidate(name: str) -> None:
-        nonlocal seq
-        t = programs[name].ready_time()
-        if t is not None:
-            heapq.heappush(heap, (t, seq, name))
-            seq += 1
-
-    for n in programs:
-        push_candidate(n)
-
-    while heap and stats.total_fired < max_firings:
-        now, _, name = heapq.heappop(heap)
-        if now > max_cycles:
-            stats.hit_cycle_cap = True
-            break
-        t = programs[name].ready_time(count_stall=True)
-        if t is None:
-            continue            # became blocked; a pop/firing requeues it
-        if t > now:
-            heapq.heappush(heap, (t, seq, name))
-            seq += 1
-            continue
-        done, busy, wake = programs[name].fire(now)
-        stats.fired[name] += 1
-        stats.fire_times[name].append(now)
-        stats.busy_cycles[name] += busy
-        stats.total_fired += 1
-        stats.cycles = max(stats.cycles, done)
-        for c in set(wake) | {name}:
-            push_candidate(c)
-    return stats
+    """Drive `Program`s to quiescence under a virtual clock (the
+    functional entry point over `EventLoop`)."""
+    return EventLoop(programs).run(max_firings=max_firings,
+                                   max_cycles=max_cycles)

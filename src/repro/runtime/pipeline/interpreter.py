@@ -13,7 +13,8 @@ stage, comparable against `core/throughput.analyze`.
 
 The event loop itself is the graph-generic executor core's virtual-clock
 driver (`engine.run_event_loop`): this module only defines the per-node
-*program* (`_HostNode`) — KPN firing rules, FORK/JOIN routing state,
+*program* (`_HostNode`, an `engine.Program` — the same protocol the
+wall-clock `Engine` drives) — KPN firing rules, FORK/JOIN routing state,
 multirate token blocks, source streams, and per-device busy clocks.  The
 loop owns the heap, candidate re-queueing, wake-set propagation, and the
 firing/cycle caps, shared with the wall-clock engine the jax paths run on.
@@ -36,7 +37,7 @@ from ...core.fork_join import LITERAL, ForkJoinModel
 from ...core.stg import FORK, JOIN, STG, Selection
 from ...core.transform import ReplicatedGraph, materialize
 from .channels import ChannelSet
-from .engine import run_event_loop, steady_inverse
+from .engine import Op, run_event_loop, steady_inverse
 from .placement import Placement, StageSlice, place
 
 
@@ -105,15 +106,21 @@ def execute(stg: STG, sel, inputs: dict[str, list], *,
 
 
 class _HostNode:
-    """One materialised worker as a virtual-clock `engine.EventProgram`.
+    """One materialised worker as an `engine.Program` (virtual clock).
 
     Owns the node-specific halves of the firing rule — token/rate
     readiness, FORK/JOIN port scheduling, source streams, backpressure
     probes, and busy-clock updates — while `engine.run_event_loop` owns
-    when anything runs."""
+    when anything runs.  ``dispatch`` consumes tokens at ``driver.now``
+    and returns the node-function thunk; ``retire`` produces outputs at
+    ``now + latency``, advances the node/device busy clocks, and wakes
+    the neighbours whose readiness may have changed."""
 
-    def __init__(self, name: str, ctx: "_HostContext"):
+    def __init__(self, idx: int, name: str, ctx: "_HostContext"):
+        self.idx = idx
         self.name = name
+        self.n_replicas = 1
+        self.fired = 0
         self.ctx = ctx
         g = ctx.g
         self.node = g.nodes[name]
@@ -121,13 +128,30 @@ class _HostNode:
         self.in_chs = g.in_channels(name)
         self.out_chs = g.out_channels(name)
         self.slice = ctx.pl.slices.get(name)
+        self._wake_pending: set[str] = set()
 
     def _required_out_ports(self) -> list[int]:
         if self.node.kind == FORK:
             return [self.ctx.state[self.name] or 0]
         return [ch.src_port for ch in self.out_chs]
 
-    def ready_time(self, count_stall: bool = False) -> float | None:
+    def pending(self) -> int:
+        """KPN nodes have no op count — firings are decided by token
+        arrival, and a finite stream *terminates by quiescence* (no node
+        fireable, nothing in flight), not by draining a schedule.  So
+        pending is "fireable right now": both drivers then stop exactly
+        at quiescence (the event loop via an empty heap, the wall-clock
+        engine via its pending-or-inflight loop, cleanly — quiescence is
+        normal KPN termination, not a deadlock), and
+        `execute_materialized`'s wedge guard is the truncation check
+        that tells end-of-stream apart from an undersized buffer."""
+        op = self.peek()
+        return 1 if op is not None and self.ready(op) is not None else 0
+
+    def peek(self) -> Op | None:
+        return Op(stage=self.idx, kind="N", seq=self.fired, rep=0)
+
+    def ready(self, op: Op, count_stall: bool = False) -> float | None:
         """Earliest fire time, or None if blocked on tokens/space.
 
         ``count_stall``: record a producer stall on the blocking fifo —
@@ -169,9 +193,9 @@ class _HostNode:
                     return None
         return t
 
-    def fire(self, now: float):
+    def dispatch(self, op: Op, driver):
         ctx, node, name = self.ctx, self.node, self.name
-        # -- consume ---------------------------------------------------------
+        # -- consume (at dispatch time: frees producer space immediately) ----
         ins: list[list] = [[] for _ in range(max(1, node.n_in))]
         wake: set[str] = set()
         if self.in_chs:
@@ -190,14 +214,27 @@ class _HostNode:
             p = ctx.src_pos[name]
             ins[0] = ctx.src_streams[name][p:p + n_need]
             ctx.src_pos[name] = p + n_need
-        # -- compute ---------------------------------------------------------
+        self._wake_pending = wake
+        return self._compute, (ins,)
+
+    def _compute(self, ins):
+        node, name = self.node, self.name
+        state = self.ctx.state[name]
         if node.fn is not None:
-            outs, ctx.state[name] = node.fn(ins, ctx.state[name])
+            outs, state = node.fn(ins, state)
         elif not self.in_chs:
             outs = [ins[0]]
         else:
             outs = ([list(ins[0]) for _ in range(node.n_out)]
                     if self.out_chs else [list(ins[0])])
+        return outs, state
+
+    def retire(self, op: Op, result, driver) -> float:
+        ctx, node, name = self.ctx, self.node, self.name
+        outs, ctx.state[name] = result
+        now = driver.now
+        wake = self._wake_pending
+        self._wake_pending = set()
         # -- produce ---------------------------------------------------------
         done = now + (self.impl.latency or self.impl.ii)
         if self.out_chs:
@@ -214,7 +251,13 @@ class _HostNode:
             for d in self.slice.devices:
                 ctx.dev_free[d] = now + self.impl.ii
                 wake.update(ctx.dev_workers[d])
-        return done, self.impl.ii, wake
+        self.fired += 1
+        driver.note_busy(name, self.impl.ii)
+        driver.wake(*wake)
+        return done
+
+    def describe(self) -> str:
+        return f"{self.name}: {self.fired} fired"
 
 
 @dataclass
@@ -264,7 +307,7 @@ def execute_materialized(rg: ReplicatedGraph, pl: Placement,
         src_pos={n: 0 for n in inputs},
         outputs={n: [] for n in g.nodes if not g.out_channels(n)})
 
-    programs = {n: _HostNode(n, ctx) for n in g.nodes}
+    programs = {n: _HostNode(i, n, ctx) for i, n in enumerate(g.nodes)}
     stats = run_event_loop(programs, max_firings=max_firings,
                            max_cycles=max_cycles)
     run.outputs = ctx.outputs

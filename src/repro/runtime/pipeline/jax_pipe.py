@@ -11,12 +11,22 @@ devices; a no-op on a single-device pool, which then time-shares — the
 placement layer reports the oversubscription), microbatches are dispatched
 to stage replicas round-robin (the fork/join routing of
 `core/transform.py` collapsed to its end-to-end effect), and execution
-follows a 1F1B schedule for train shapes or fill-drain streaming for
-serving.  Stage bodies are built from `models/blocks.py`.
+follows whatever `schedule.Schedule` object the caller passes.  Stage
+bodies are built from `models/blocks.py`.
+
+This module generates **no schedules**: ``run(schedule=...)`` consumes a
+first-class `schedule.Schedule` (defaults: `schedule.one_f_one_b` for
+train shapes, `schedule.fill_drain` for serving), and an interleaved
+schedule (`schedule.interleaved_1f1b(p, m, v)`) runs ``v`` virtual-stage
+chunks per physical program — op ``(kind, mb, chunk)`` executes built
+model stage ``chunk * p + s`` — over the same linear activation/gradient
+FIFO chain, shrinking the pipeline bubble for deep LM graphs while
+keeping grads bitwise-equal to plain 1F1B and sequential autodiff.
 
 The event loop itself lives in the graph-generic executor core
-(`engine.Engine`): this module only defines *stage programs* — per-stage
-dispatch/retire hooks for the embed/block/head forward and backward ops
+(`engine.Engine`, a driver of the one `engine.Program` protocol): this
+module only defines *stage programs* — per-physical-stage
+ready/dispatch/retire hooks for the scheduled forward and backward ops
 (`_LMStageProgram`).  The engine owns FIFO credits, per-edge reorder
 buffers, replica busy budgets, completion timing, and deadlock detection,
 shared with the host interpreter and the decode serving pipeline.
@@ -65,9 +75,10 @@ from ...launch.sharding import ShardingPolicy, stage_param_shardings
 from ...models import blocks
 from ...models.common import KeyGen, dense_init, rmsnorm
 from .channels import Fifo
-from .engine import Engine, Op, steady_inverse
+from .engine import Engine, Op, describe_position, steady_inverse
 from .placement import Placement, place
-from .schedule import fill_drain, one_f_one_b
+from .schedule import (SchedOp, Schedule, fill_drain, max_live_by_chunk,
+                       one_f_one_b)
 
 
 def selection_from_plan(plan) -> Selection:
@@ -268,24 +279,31 @@ def _bwd_op(st: LMStage, rep: int, vjp, y_bar, logits, loss_fn):
 # stage program: one pipeline stage's schedule on the shared engine
 # ===========================================================================
 class _LMStageProgram:
-    """Dispatch/retire hooks for one LM stage's scheduled F/B ops.
+    """Ready/dispatch/retire hooks for one *physical* stage's scheduled
+    F/B ops — an `engine.Program`.
 
-    Both F and B ops reach each stage in microbatch order, so each
+    A physical stage executes one or more virtual-stage *chunks*: op
+    ``(kind, mb, chunk)`` runs built model stage ``chunks[chunk]``
+    (plain schedules have exactly one chunk, the identity case).  Both F
+    and B ops reach each model-stage edge in microbatch order, so each
     inter-stage fifo's head is always the next scheduled microbatch —
-    consumers pop the head directly; out-of-order replica completions are
-    re-sorted by the engine's per-edge reorder buffer.
+    consumers pop the head directly; out-of-order replica completions
+    are re-sorted by the engine's per-edge reorder buffer.
     """
 
     def __init__(self, s: int, pipe: "LMPipeline", ops: list, *,
-                 acts: list, grds: list | None, res: LMPipelineResult,
-                 microbatches: list, train: bool, loss_fn,
-                 grads: dict | None, raw_losses: dict):
+                 chunks: list[int], acts: list, grds: list | None,
+                 res: LMPipelineResult, microbatches: list, train: bool,
+                 loss_fn, grads: dict | None, raw_losses: dict):
         self.s = s
-        self.S = pipe.n_stages
-        self.st = pipe.stages[s]
-        self.name = self.st.name
-        self.n_replicas = len(self.st.devices)
-        self.ops = ops
+        self.M = pipe.n_stages              # built model stages
+        self.pipe = pipe
+        self.chunks = chunks                # chunk c -> built stage index
+        self.stages = [pipe.stages[i] for i in chunks]
+        self.name = (self.stages[0].name if len(chunks) == 1 else
+                     "+".join(st.name for st in self.stages))
+        self.n_replicas = max(len(st.devices) for st in self.stages)
+        self.ops = ops                      # list[SchedOp]
         self.pos = 0
         self.stall_mark = -1
         self.acts = acts
@@ -296,11 +314,16 @@ class _LMStageProgram:
         self.loss_fn = loss_fn
         self.grads = grads
         self.raw_losses = raw_losses
-        self.vjps: dict[int, object] = {}
+        self.vjps: dict[tuple[int, int], object] = {}   # (built, mb)
+        # in-flight-activation ceilings per chunk, from the schedule
+        # itself (chunk-aware max_live) — the runtime assert that catches
+        # a driver mis-ordering ops against the schedule's memory promise
+        self.live_bound = max_live_by_chunk(ops)
+        self._live = {c: 0 for c in self.live_bound}
         # deterministic grad accumulation: p_bars fold in microbatch order
-        # regardless of which replica retires first
-        self.acc_next = 0
-        self.acc_buf: dict[int, object] = {}
+        # per built stage regardless of which replica retires first
+        self.acc_next = {i: 0 for i in chunks}
+        self.acc_buf = {i: {} for i in chunks}
 
     def pending(self) -> int:
         return len(self.ops) - self.pos
@@ -308,86 +331,97 @@ class _LMStageProgram:
     def peek(self) -> Op | None:
         if self.pos >= len(self.ops):
             return None
-        kind, mb = self.ops[self.pos]
-        return Op(stage=self.s, kind=kind, seq=mb,
-                  rep=mb % self.n_replicas, is_firing=(kind == "F"))
+        k = self.ops[self.pos]
+        st = self.stages[k.chunk]
+        return Op(stage=self.s, kind=k.kind, seq=k.mb, chunk=k.chunk,
+                  rep=k.mb % len(st.devices), is_firing=(k.kind == "F"))
 
-    def ready(self, op: Op) -> bool:
-        """Can this op be dispatched now?  Counts a producer stall the
-        first time a given op is deferred purely by output-buffer
+    def ready(self, op: Op, count_stall: bool = False) -> float | None:
+        """None while blocked on tokens/credits; counts a producer stall
+        the first time a given op is deferred purely by output-buffer
         backpressure."""
-        s, S, mb = self.s, self.S, op.seq
+        i, M, mb = self.chunks[op.chunk], self.M, op.seq
         if op.kind == "F":
-            if s > 0 and not self.acts[s - 1].can_pop(1):
-                return False
-            if s < S - 1 and not self.acts[s].can_push(1):
+            if i > 0 and not self.acts[i - 1].can_pop(1):
+                return None
+            if i < M - 1 and not self.acts[i].can_push(1):
                 if self.stall_mark != self.pos:
                     self.stall_mark = self.pos
-                    self.acts[s].note_stall()
-                return False              # backpressure: skip this turn
+                    self.acts[i].note_stall()
+                return None               # backpressure: skip this turn
         else:
-            if mb not in self.vjps:
-                return False              # forward still in flight
-            if s < S - 1 and not self.grds[s].can_pop(1):
-                return False
-            if s > 0 and not self.grds[s - 1].can_push(1):
+            if (i, mb) not in self.vjps:
+                return None               # forward still in flight
+            if i < M - 1 and not self.grds[i].can_pop(1):
+                return None
+            if i > 0 and not self.grds[i - 1].can_push(1):
                 if self.stall_mark != self.pos:
                     self.stall_mark = self.pos
-                    self.grds[s - 1].note_stall()
-                return False
-        return True
+                    self.grds[i - 1].note_stall()
+                return None
+        return 0.0
 
-    def dispatch(self, op: Op):
-        s, S, mb, st = self.s, self.S, op.seq, self.st
+    def dispatch(self, op: Op, driver):
+        i, M, mb = self.chunks[op.chunk], self.M, op.seq
+        st = self.stages[op.chunk]
+        rep = mb % len(st.devices)
         if op.kind == "F":
-            if s == 0:
+            if i == 0:
                 x = self.microbatches[mb]
             else:
-                mb_got, x = self.acts[s - 1].pop_hold(1)[0]
+                mb_got, x = self.acts[i - 1].pop_hold(1)[0]
                 assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
-                op.releases.append((self.acts[s - 1], 1))
-            if s < S - 1:
-                self.acts[s].reserve(1)
-            task = (_fwd_op, (st, op.rep, x, self.train))
+                op.releases.append((self.acts[i - 1], 1))
+            if i < M - 1:
+                self.acts[i].reserve(1)
+            task = (_fwd_op, (st, rep, x, self.train))
         else:
-            if s == S - 1:
+            if i == M - 1:
                 logits, y_bar = self.res.outputs[mb], None
                 # release the vocab-sized tensor: 1F1B exists to bound
                 # live activations, so don't hoard logits
                 self.res.outputs[mb] = None
             else:
-                mb_got, y_bar = self.grds[s].pop_hold(1)[0]
+                mb_got, y_bar = self.grds[i].pop_hold(1)[0]
                 assert mb_got == mb, f"fifo order broke: {mb_got}!={mb}"
-                op.releases.append((self.grds[s], 1))
+                op.releases.append((self.grds[i], 1))
                 logits = None
-            if s > 0:
-                self.grds[s - 1].reserve(1)
-            task = (_bwd_op, (st, op.rep, self.vjps.pop(mb), y_bar, logits,
-                              self.loss_fn))
+            if i > 0:
+                self.grds[i - 1].reserve(1)
+            self._live[op.chunk] -= 1
+            task = (_bwd_op, (st, rep, self.vjps.pop((i, mb)), y_bar,
+                              logits, self.loss_fn))
         self.pos += 1
         return task
 
     def retire(self, op: Op, result, engine: Engine) -> float:
-        s, S, st = self.s, self.S, self.st
+        i, M = self.chunks[op.chunk], self.M
+        st = self.stages[op.chunk]
         if op.kind == "F":
             y, vjp, t_done = result
             if self.train:
-                self.vjps[op.seq] = vjp
-            if s < S - 1:
-                engine.ordered_push(self.acts[s], op.seq, y, t_done)
+                self.vjps[(i, op.seq)] = vjp
+                self._live[op.chunk] += 1
+                assert self._live[op.chunk] <= self.live_bound[op.chunk], \
+                    (f"{self.name}: chunk {op.chunk} holds "
+                     f"{self._live[op.chunk]} live activations, schedule "
+                     f"promised {self.live_bound[op.chunk]}")
+            if i < M - 1:
+                engine.ordered_push(self.acts[i], op.seq, y, t_done)
             else:
                 self.res.outputs[op.seq] = y
                 self.res.mb_done_s.append(t_done - engine.t0)
         else:
             p_bar, x_bar, lval, t_done = result
-            if s > 0:
-                engine.ordered_push(self.grds[s - 1], op.seq, x_bar, t_done)
+            if i > 0:
+                engine.ordered_push(self.grds[i - 1], op.seq, x_bar, t_done)
             if lval is not None:
                 self.raw_losses[op.seq] = lval
-            self.acc_buf[op.seq] = p_bar
-            while self.acc_next in self.acc_buf:
-                pb = self.acc_buf.pop(self.acc_next)
-                self.acc_next += 1
+            buf, nxt = self.acc_buf[i], self.acc_next
+            buf[op.seq] = p_bar
+            while nxt[i] in buf:
+                pb = buf.pop(nxt[i])
+                nxt[i] += 1
                 pb = jax.device_put(pb, st.grad_target())
                 self.grads[st.name] = (
                     pb if self.grads[st.name] is None else
@@ -395,7 +429,8 @@ class _LMStageProgram:
         return t_done
 
     def describe(self) -> str:
-        return f"{self.name}: {self.pos}/{len(self.ops)}"
+        return describe_position(self.name, self.pos, self.ops,
+                                 SchedOp.describe)
 
 
 # ===========================================================================
@@ -408,7 +443,11 @@ class LMPipeline:
     dispatch + on-device prefetch; the default); ``prefetch_blocks`` is
     how many queued activations each channel stages onto the consumer's
     device slice ahead of consumption; ``workers`` caps the dispatch pool
-    (default: one per replica slice, at most 16).
+    (default: one per replica slice, at most 16).  ``schedule`` is the
+    default `schedule.Schedule` object ``run`` executes (per-run
+    ``schedule=`` overrides it; None picks `schedule.one_f_one_b` for
+    training and `schedule.fill_drain` for serving) — schedules are
+    plan data, never generated here.
     """
 
     def __init__(self, cfg: ModelConfig, stg: STG, sel: Selection, *,
@@ -416,8 +455,10 @@ class LMPipeline:
                  capacity_blocks: int = 2, seed: int = 0,
                  overlap: bool = True, prefetch_blocks: int = 1,
                  replica_queue: int = 2, workers: int | None = None,
-                 policy: ShardingPolicy | None = None):
+                 policy: ShardingPolicy | None = None,
+                 schedule: Schedule | None = None):
         self.cfg = cfg
+        self.schedule = schedule
         devices = list(devices if devices is not None else jax.devices())
         names, fwds, init_params = build_lm_stages(
             cfg, layers_per_stage=layers_per_stage, seed=seed)
@@ -541,38 +582,74 @@ class LMPipeline:
                     prefetch_depth=self.prefetch_blocks
                     * len(consumer.devices) * self.replica_queue)
 
-    def run(self, microbatches: list, *, train: bool = False,
-            loss_fn=None, overlap: bool | None = None) -> LMPipelineResult:
-        """Stream microbatches through the pipeline.
+    def _resolve_schedule(self, schedule: Schedule | None, n_micro: int,
+                          train: bool) -> Schedule:
+        """Check a caller's schedule object against this pipeline and this
+        run, or pick the default (`one_f_one_b` / `fill_drain`)."""
+        M = self.n_stages
+        if schedule is None:
+            schedule = self.schedule
+        if schedule is None:
+            return (one_f_one_b(M, n_micro) if train
+                    else fill_drain(M, n_micro))
+        if schedule.n_model_stages != M:
+            raise ValueError(
+                f"schedule {schedule.name} covers "
+                f"{schedule.n_stages} x {schedule.n_chunks} = "
+                f"{schedule.n_model_stages} model stages; this pipeline "
+                f"built {M}")
+        if schedule.n_micro != n_micro:
+            raise ValueError(
+                f"schedule {schedule.name} is for {schedule.n_micro} "
+                f"microbatches; run got {n_micro}")
+        if train != schedule.trains:
+            raise ValueError(
+                f"schedule {schedule.name} "
+                f"{'has no backward ops' if train else 'schedules backward'}"
+                f" — mismatched with train={train}")
+        return schedule.validate()
 
-        Serving (train=False): fill-drain streaming with bounded
-        inter-stage buffers — a stage whose output fifo is full skips its
-        turn until the consumer drains it.  Training (train=True): 1F1B
-        with per-stage vjp backward and grad accumulation;
-        ``loss_fn(logits) -> scalar`` seeds the backward (defaults to
-        sum-of-logits).  ``overlap`` overrides the pipeline-level knob for
-        this run (the benchmark's A/B switch).
+    def run(self, microbatches: list, *, train: bool = False,
+            loss_fn=None, overlap: bool | None = None,
+            schedule: Schedule | None = None) -> LMPipelineResult:
+        """Stream microbatches through the pipeline under ``schedule``.
+
+        Serving (train=False) defaults to `schedule.fill_drain` streaming
+        with bounded inter-stage buffers — a stage whose output fifo is
+        full skips its turn until the consumer drains it.  Training
+        (train=True) defaults to `schedule.one_f_one_b` with per-stage
+        vjp backward and grad accumulation; ``loss_fn(logits) -> scalar``
+        seeds the backward (defaults to sum-of-logits).  An interleaved
+        schedule (``schedule.interleaved_1f1b(p, m, v)`` with
+        ``p * v == n_stages``) runs v virtual-stage chunks per physical
+        program over the same FIFO chain — grads stay bitwise-equal to
+        the plain schedules.  ``overlap`` overrides the pipeline-level
+        knob for this run (the benchmark's A/B switch).
         """
         overlap = self.overlap if overlap is None else overlap
         n_micro = len(microbatches)
-        S = self.n_stages
-        sched = one_f_one_b(S, n_micro) if train else fill_drain(S, n_micro)
+        M = self.n_stages
+        sched = self._resolve_schedule(schedule, n_micro, train)
+        p = sched.n_stages
 
-        acts = [self._edge_fifo(self.stages[s], self.stages[s + 1], overlap)
-                for s in range(S - 1)]             # s -> s+1 activations
-        grds = [self._edge_fifo(self.stages[s + 1], self.stages[s], overlap)
-                for s in range(S - 1)] if train else None
+        acts = [self._edge_fifo(self.stages[i], self.stages[i + 1], overlap)
+                for i in range(M - 1)]             # i -> i+1 activations
+        grds = [self._edge_fifo(self.stages[i + 1], self.stages[i], overlap)
+                for i in range(M - 1)] if train else None
         res = LMPipelineResult(outputs=[None] * n_micro,
                                placement=self.placement)
         grads = {st.name: None for st in self.stages} if train else None
         raw_losses: dict[int, object] = {}
 
         programs = [
-            _LMStageProgram(s, self, sched[s], acts=acts, grds=grds,
-                            res=res, microbatches=microbatches, train=train,
+            _LMStageProgram(s, self, sched.stage_ops[s],
+                            chunks=[sched.model_stage(s, c)
+                                    for c in range(sched.n_chunks)],
+                            acts=acts, grds=grds, res=res,
+                            microbatches=microbatches, train=train,
                             loss_fn=loss_fn, grads=grads,
                             raw_losses=raw_losses)
-            for s in range(S)]
+            for s in range(p)]
         engine = Engine(programs, overlap=overlap,
                         workers=self._n_workers(),
                         replica_queue=self.replica_queue)
@@ -592,8 +669,8 @@ class LMPipeline:
         res.mb_done_s.sort()
         res.wall_s = time.perf_counter() - engine.t0
         res.grads = grads
-        for s in range(S - 1):
-            res.fifo_stats[("act", s)] = acts[s].stats
+        for i in range(M - 1):
+            res.fifo_stats[("act", i)] = acts[i].stats
             if grds is not None:
-                res.fifo_stats[("grd", s)] = grds[s].stats
+                res.fifo_stats[("grd", i)] = grds[i].stats
         return res

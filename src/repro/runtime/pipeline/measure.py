@@ -227,6 +227,31 @@ def compare_lm(stg: STG, sel: Selection, res,
         err_hint=lambda _: " — stream more microbatches before measuring")
 
 
+def measured_bubble(run) -> float:
+    """Measured pipeline-bubble fraction of one executed run: the idle
+    share of the run's total stage-time budget,
+
+        1 - sum(per-stage busy) / (n_stages * makespan)
+
+    Works on either clock domain's result — an `engine.EngineResult` (or
+    a backend result aliasing its fields: busy = ``stage_seconds``,
+    makespan = ``wall_s``) or an `engine.EventLoopStats` (busy =
+    ``busy_cycles``, makespan = ``cycles``) — and lines up against the
+    analytic `schedule.fill_drain_bubble` / `schedule.interleaved_bubble`
+    ceilings.  Wall-clock values on oversubscribed pools mix bubble with
+    time-sharing; the virtual-clock domain (`schedule.simulate_schedule`)
+    measures the schedule's own dynamics cleanly."""
+    if hasattr(run, "busy_cycles"):               # EventLoopStats
+        busy, span, n = (sum(run.busy_cycles.values()), run.cycles,
+                         len(run.busy_cycles))
+    else:                                         # EngineResult-shaped
+        busy, span, n = (sum(run.stage_seconds.values()), run.wall_s,
+                         len(run.stage_seconds))
+    if span <= 0 or n == 0:
+        return float("nan")
+    return 1.0 - busy / (n * span)
+
+
 def calibrate(stg: STG, ratios: dict[str, float],
               floor: float = 0.05) -> STG:
     """A copy of ``stg`` whose implementation IIs are scaled per node by the

@@ -28,8 +28,8 @@ from repro.graphs import jpeg, streamit
 from repro.runtime.pipeline import (Fifo, LMPipeline, LMPipelineResult,
                                     as_selection, compare, compare_lm,
                                     execute, fill_drain, fill_drain_bubble,
-                                    max_live_activations, measured_replan,
-                                    one_f_one_b, place,
+                                    interleaved_1f1b, max_live_activations,
+                                    measured_replan, one_f_one_b, place,
                                     replan_to_fixed_point,
                                     selection_from_plan, tp_of)
 
@@ -433,28 +433,34 @@ def test_report_json_roundtrip(jpeg_graph, jpeg_blocks):
 
 
 # ===========================================================================
-# schedules
+# schedules (first-class plan objects; full coverage in test_schedule.py)
 # ===========================================================================
 @pytest.mark.parametrize("n_stages,n_micro", [(1, 1), (2, 3), (4, 8), (6, 4)])
 def test_one_f_one_b_invariants(n_stages, n_micro):
     sched = one_f_one_b(n_stages, n_micro)
+    assert sched.n_stages == n_stages and sched.n_chunks == 1
     for s, ops in enumerate(sched):
-        assert sorted(ops) == sorted([("F", m) for m in range(n_micro)]
-                                     + [("B", m) for m in range(n_micro)])
+        assert sorted((op.kind, op.mb) for op in ops) == \
+            sorted([("F", m) for m in range(n_micro)]
+                   + [("B", m) for m in range(n_micro)])
         seen_f = set()
-        for kind, mb in ops:
-            if kind == "F":
-                seen_f.add(mb)
+        for op in ops:
+            if op.kind == "F":
+                seen_f.add(op.mb)
             else:
-                assert mb in seen_f, "backward before forward"
+                assert op.mb in seen_f, "backward before forward"
         assert max_live_activations(ops) <= min(n_stages - s, n_micro)
+        assert max_live_activations(ops) <= sched.live_bounds[s]
     # last stage strictly alternates once warm
     last = sched[-1]
-    assert last[:2] == [("F", 0), ("B", 0)]
+    assert [(op.kind, op.mb) for op in last[:2]] == [("F", 0), ("B", 0)]
 
 
 def test_fill_drain_is_streaming_order():
-    assert fill_drain(3, 2) == [[("F", 0), ("F", 1)]] * 3
+    from repro.runtime.pipeline import SchedOp
+    sched = fill_drain(3, 2)
+    assert sched.stage_ops == [[SchedOp("F", 0), SchedOp("F", 1)]] * 3
+    assert not sched.trains
 
 
 def test_fill_drain_bubble_fraction():
@@ -776,6 +782,180 @@ def test_multidevice_tp_sharding_and_replica_parity():
     assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
     assert "TPSHARD_OK" in r.stdout
     assert "PARITY_OK" in r.stdout
+
+
+# ===========================================================================
+# interleaved 1F1B on the jax LM path (schedules as plan objects)
+# ===========================================================================
+@pytest.fixture(scope="module")
+def lm6_setup():
+    """A 6-layer tiny variant: embed + 6 blocks + head = 8 built stages,
+    the smallest graph that interleaves over >= 4 physical stages."""
+    from dataclasses import replace
+
+    import jax.numpy as jnp
+    from repro.configs.base import ShapeCfg
+    from repro.configs.tiny import CONFIG as tiny
+    from repro.graphs import lm_graph
+    tiny6 = replace(tiny, name="tiny6", n_layers=6)
+    stg, _ = lm_graph.build_stg(tiny6, ShapeCfg("ilv_test", 16, 8, "train"),
+                                max_tp=4)
+    pipe = LMPipeline(tiny6, stg, Selection.smallest(stg))
+    rng = np.random.default_rng(11)
+    mbs = [jnp.asarray(rng.integers(0, tiny6.vocab, (2, 16)), jnp.int32)
+           for _ in range(8)]
+    return pipe, mbs
+
+
+def _sequential_vjp_grads(pipe, mbs, loss):
+    """Sequential autodiff over the same jitted stage fns the pipeline
+    runs, accumulated in microbatch order on the same grad targets — the
+    bitwise reference both schedules must reproduce."""
+    import jax
+    import jax.numpy as jnp
+    grads = {st.name: None for st in pipe.stages}
+    losses = {}
+    for i, mb in enumerate(mbs):
+        x = mb
+        vjps = []
+        for st in pipe.stages:
+            x = jax.device_put(x, st.x_target(0))
+            y, vjp = jax.vjp(st.fwd, st.params[0], x)
+            vjps.append(vjp)
+            x = y
+        lval, y_bar = jax.value_and_grad(loss)(x)
+        losses[i] = float(lval)
+        for st, vjp in reversed(list(zip(pipe.stages, vjps))):
+            p_bar, y_bar = vjp(y_bar)
+            pb = jax.device_put(p_bar, st.grad_target())
+            grads[st.name] = (pb if grads[st.name] is None else
+                              jax.tree.map(jnp.add, grads[st.name], pb))
+    return grads, losses
+
+
+def test_interleaved_1f1b_grads_bitwise_equal(lm6_setup):
+    """Acceptance: interleaved 1F1B over 4 physical stages x 2 chunks
+    produces grads bitwise-equal to plain 1F1B and to sequential
+    autodiff (same vjp chain, same accumulation order)."""
+    import jax
+    import jax.numpy as jnp
+    pipe, mbs = lm6_setup
+    assert pipe.n_stages == 8
+    loss = lambda lg: jnp.sum(lg * lg) / lg.size
+    r_plain = pipe.run(mbs, train=True, loss_fn=loss,
+                       schedule=one_f_one_b(8, len(mbs)))
+    r_ilv = pipe.run(mbs, train=True, loss_fn=loss,
+                     schedule=interleaved_1f1b(4, len(mbs), 2))
+    # 4 physical programs, each named for its two chunks
+    assert len(r_ilv.stage_firings) == 4
+    assert "embed+block03" in r_ilv.stage_firings
+    assert r_ilv.stage_firings["embed+block03"] == 2 * 2 * len(mbs)
+    g_seq, losses_seq = _sequential_vjp_grads(pipe, mbs, loss)
+    assert r_plain.losses == r_ilv.losses == pytest.approx(losses_seq)
+    for st in pipe.stages:
+        for a, b, c in zip(jax.tree.leaves(r_plain.grads[st.name]),
+                           jax.tree.leaves(r_ilv.grads[st.name]),
+                           jax.tree.leaves(g_seq[st.name])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(np.asarray(b), np.asarray(c))
+
+
+def test_interleaved_default_schedule_at_construction(lm6_setup):
+    """LMPipeline(schedule=...) sets the default `run` executes."""
+    import jax
+    import jax.numpy as jnp
+    from repro.runtime.pipeline import Schedule
+    pipe, mbs = lm6_setup
+    mbs = mbs[:4]
+    pipe2 = LMPipeline(pipe.cfg, *_lm6_graph_sel(pipe.cfg),
+                       schedule=interleaved_1f1b(4, 4, 2))
+    assert isinstance(pipe2.schedule, Schedule)
+    loss = lambda lg: jnp.sum(lg * lg) / lg.size
+    res = pipe2.run(mbs, train=True, loss_fn=loss)
+    assert set(res.stage_firings) == {"embed+block03", "block00+block04",
+                                      "block01+block05", "block02+head"}
+    ref = pipe2.run(mbs, train=True, loss_fn=loss,
+                    schedule=one_f_one_b(8, 4))
+    for name in res.grads:
+        for a, b in zip(jax.tree.leaves(res.grads[name]),
+                        jax.tree.leaves(ref.grads[name])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _lm6_graph_sel(cfg):
+    from repro.configs.base import ShapeCfg
+    from repro.graphs import lm_graph
+    stg, _ = lm_graph.build_stg(cfg, ShapeCfg("ilv_test", 16, 8, "train"),
+                                max_tp=4)
+    return stg, Selection.smallest(stg)
+
+
+def test_run_rejects_mismatched_schedules(lm6_setup):
+    import jax.numpy as jnp
+    pipe, mbs = lm6_setup
+    loss = lambda lg: jnp.sum(lg * lg) / lg.size
+    with pytest.raises(ValueError, match="model stages"):
+        pipe.run(mbs, train=True, loss_fn=loss,
+                 schedule=interleaved_1f1b(2, len(mbs), 2))
+    with pytest.raises(ValueError, match="microbatches"):
+        pipe.run(mbs[:4], train=True, loss_fn=loss,
+                 schedule=one_f_one_b(8, len(mbs)))
+    with pytest.raises(ValueError, match="no backward"):
+        pipe.run(mbs, train=True, loss_fn=loss,
+                 schedule=fill_drain(8, len(mbs)))
+    with pytest.raises(ValueError, match="schedules backward"):
+        pipe.run(mbs, schedule=one_f_one_b(8, len(mbs)))
+
+
+_MULTIDEV_ILV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    from dataclasses import replace
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ShapeCfg
+    from repro.configs.tiny import CONFIG as tiny
+    from repro.core.stg import Selection
+    from repro.graphs import lm_graph
+    from repro.runtime.pipeline import (LMPipeline, interleaved_1f1b,
+                                        one_f_one_b)
+
+    assert len(jax.devices()) == 8
+    tiny6 = replace(tiny, name="tiny6", n_layers=6)
+    stg, _ = lm_graph.build_stg(tiny6, ShapeCfg("ilv_par", 16, 8, "train"),
+                                max_tp=4)
+    pipe = LMPipeline(tiny6, stg, Selection.smallest(stg))
+    assert pipe.n_stages == 8
+    spread = {st.devices[0] for st in pipe.stages}
+    assert len(spread) == 8, f"stages folded onto {len(spread)} device(s)"
+    rng = np.random.default_rng(5)
+    mbs = [jnp.asarray(rng.integers(0, tiny6.vocab, (2, 16)), jnp.int32)
+           for _ in range(8)]
+    loss = lambda lg: jnp.sum(lg * lg) / lg.size
+    r_plain = pipe.run(mbs, train=True, loss_fn=loss,
+                       schedule=one_f_one_b(8, 8))
+    r_ilv = pipe.run(mbs, train=True, loss_fn=loss,
+                     schedule=interleaved_1f1b(4, 8, 2))
+    assert r_plain.losses == r_ilv.losses
+    for st in pipe.stages:
+        for a, b in zip(jax.tree.leaves(r_plain.grads[st.name]),
+                        jax.tree.leaves(r_ilv.grads[st.name])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("INTERLEAVED_PARITY_OK")
+""")
+
+
+def test_multidevice_interleaved_schedule_parity():
+    """On an 8-device pool an interleaved schedule runs its virtual-stage
+    chunks on their real placement devices (activations device-to-device
+    across the wrap-around edges) and still produces grads bitwise-equal
+    to plain 1F1B."""
+    r = subprocess.run([sys.executable, "-c", _MULTIDEV_ILV],
+                       capture_output=True, text=True, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+    assert "INTERLEAVED_PARITY_OK" in r.stdout
 
 
 def test_lm_pipeline_rejects_graphs_it_cannot_execute():

@@ -219,10 +219,10 @@ def test_engine_releases_held_slots_when_op_raises(overlap):
         def peek(self):
             return None if self.done else Op(stage=0, kind="F", seq=0, rep=0)
 
-        def ready(self, op):
-            return fifo.can_pop(1)
+        def ready(self, op, count_stall=False):
+            return 0.0 if fifo.can_pop(1) else None
 
-        def dispatch(self, op):
+        def dispatch(self, op, driver):
             self.done = True
             fifo.pop_hold(1)
             op.releases.append((fifo, 1))
@@ -254,10 +254,10 @@ def test_engine_detects_deadlock_with_program_state():
         def peek(self):
             return Op(stage=0, kind="F", seq=0, rep=0)
 
-        def ready(self, op):
-            return False            # forever blocked, nothing in flight
+        def ready(self, op, count_stall=False):
+            return None             # forever blocked, nothing in flight
 
-        def dispatch(self, op):
+        def dispatch(self, op, driver):
             raise AssertionError
 
         def retire(self, *a):
