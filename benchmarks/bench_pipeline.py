@@ -115,6 +115,8 @@ def _lm_rows():
     wall_on = sorted(walls[True])[1]
     wall_off = sorted(walls[False])[1]
     res = res_by[True]
+    assert pipe.compile_stats.late == 0, \
+        f"compiles landed inside a timed run: {pipe.compile_stats.summary()}"
     toks_per_mb = 2 * 32
     bubble = fill_drain_bubble(pipe.n_stages, len(mbs))
     return [{
@@ -131,6 +133,11 @@ def _lm_rows():
         "oversubscription": res.placement.oversubscription,
         "per_stage_us": {s.name: res.stage_inverse_us(s.name)
                          for s in pipe.stages},
+        # host dispatch overhead per firing, kept apart from stage II so
+        # dispatch-side regressions are data, not noise inside measured v
+        "per_stage_host_us": {s.name: res.stage_host_us(s.name)
+                              for s in pipe.stages},
+        "compile_stats": pipe.compile_stats.summary(),
         "note": "planned assumes HW_V5E chips; measured is host-CPU "
                 "wall clock — compare shapes, not magnitudes",
     }]

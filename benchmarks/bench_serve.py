@@ -11,7 +11,17 @@ as JSON (the CI artifact consumed by regression tooling).
 Both backends generate token-identical completions (asserted), so the A/B
 is apples-to-apples work.
 
+``--smoke`` serves a reduced request queue (same config, fewer slots) —
+the PR-CI perf gate: its rows (workload ``serve/tiny-smoke``) are diffed
+against the committed ``benchmarks/baseline-smoke/`` by
+`tools/bench_compare.py`, failing the job on a decode-tokens/s
+regression.  Rows also carry per-stage host dispatch overhead
+(``per_stage_host_us``, the engine's dispatch-wall-minus-device-compute
+accounting) so host-side regressions are visible separately from stage
+inverse throughput.
+
     PYTHONPATH=src python -m benchmarks.bench_serve [--json out.json]
+                                                    [--smoke]
 """
 from __future__ import annotations
 
@@ -30,7 +40,8 @@ def _percentiles(samples_s: list[float]) -> tuple[float, float]:
             float(np.percentile(arr, 95)) * 1e3)
 
 
-def run(verbose: bool = True, json_path: str | None = None) -> list[dict]:
+def run(verbose: bool = True, json_path: str | None = None,
+        smoke: bool = False) -> list[dict]:
     from repro.configs.base import ShapeCfg
     from repro.configs.tiny import CONFIG as tiny
     from repro.core import planner
@@ -43,11 +54,13 @@ def run(verbose: bool = True, json_path: str | None = None) -> list[dict]:
     stg, _ = lm_graph.build_stg(tiny, shape, max_tp=4)
 
     rng = np.random.default_rng(0)
+    n_req, max_new = (8, 12) if smoke else (16, 16)
+    workload = "serve/tiny-smoke" if smoke else "serve/tiny"
     reqs = [Request(uid=i,
                     prompt=rng.integers(2, tiny.vocab,
                                         rng.integers(4, 24)).tolist(),
-                    max_new=16)
-            for i in range(16)]
+                    max_new=max_new)
+            for i in range(n_req)]
     group = 4
 
     rows = []
@@ -67,7 +80,7 @@ def run(verbose: bool = True, json_path: str | None = None) -> list[dict]:
         single_lat.append(c.decode_s / steps)
     p50, p95 = _percentiles(single_lat)
     rows.append({
-        "workload": "serve/tiny",
+        "workload": workload,
         "backend": "single-device",
         "decode_tok_per_s": s.decode_tokens / s.decode_s if s.decode_s else 0,
         "prefill_tok_per_s": (s.prefill_tokens / s.prefill_s
@@ -81,16 +94,20 @@ def run(verbose: bool = True, json_path: str | None = None) -> list[dict]:
     })
 
     # -- pipelined ----------------------------------------------------------
+    # build-time warmup (AOT precompile) replaces the old throwaway serve:
+    # the first serve call of each shape already runs compile-free
     pipe = DecodePipeline(tiny, stg, plan)
     pipe.serve([r.prompt for r in reqs], [r.max_new for r in reqs],
-               group_size=group)          # warm every bucket's jit cache
+               group_size=group)          # steady-state measurement parity
     run_res = pipe.serve([r.prompt for r in reqs],
                          [r.max_new for r in reqs], group_size=group)
+    assert pipe.compile_stats.late == 0, \
+        f"compiles landed inside the timed serve: {pipe.compile_stats.summary()}"
     for c, toks in zip(ref_out, run_res.tokens):
         assert c.tokens == toks, "pipelined backend diverged from reference"
     p50, p95 = _percentiles(run_res.token_latencies_s())
     rows.append({
-        "workload": "serve/tiny",
+        "workload": workload,
         "backend": "pipelined",
         "decode_tok_per_s": run_res.decode_tokens_per_s(),
         # window until the LAST prefill lands (overlaps decode: the rate
@@ -102,6 +119,9 @@ def run(verbose: bool = True, json_path: str | None = None) -> list[dict]:
         "p95_token_ms": p95,
         "decode_tokens": run_res.decode_tokens,
         "wall_s": run_res.wall_s,
+        "per_stage_host_us": {n: run_res.stage_host_us(n)
+                              for n in pipe.stage_names},
+        "compile_stats": pipe.compile_stats.summary(),
         "groups": len(run_res.groups),
         "planned_stage_replicas": {sp.name: sp.replicas
                                    for sp in plan.stages},
@@ -131,6 +151,6 @@ if __name__ == "__main__":
     if "--json" in sys.argv:
         i = sys.argv.index("--json") + 1
         if i >= len(sys.argv):
-            sys.exit("usage: bench_serve [--json PATH]")
+            sys.exit("usage: bench_serve [--json PATH] [--smoke]")
         path = sys.argv[i]
-    run(verbose=True, json_path=path)
+    run(verbose=True, json_path=path, smoke="--smoke" in sys.argv)

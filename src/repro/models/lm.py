@@ -326,7 +326,15 @@ def decode_blocks(cfg: ModelConfig, stacked_params, stacked_cache, x, pos, *,
     """One decode step over a (sub-)stack of periods: scan the decode body
     over (params, cache) period pairs.  Returns (hidden, new caches).
     The whole-model `decode_step` is embed -> this -> norm/head; a
-    pipeline block stage runs it over its resident cache slice."""
+    pipeline block stage runs it over its resident cache slice.
+
+    **Donation-safe cache signature**: the returned cache pytree matches
+    ``stacked_cache`` leaf for leaf — same structure, shapes, and dtypes
+    (cache writes `.astype` back to the stored dtype; the SSM state stays
+    float32) — so an executor compiling this step with the cache donated
+    (``donate_argnums``) aliases EVERY leaf onto the resident buffers:
+    zero new cache allocations per token.  `decode_cache_structs` is the
+    checkable form of this contract."""
     def body(h, xs):
         period_params, period_cache = xs
         new_cache = {}
@@ -356,8 +364,33 @@ def decode_blocks(cfg: ModelConfig, stacked_params, stacked_cache, x, pos, *,
     return jax.lax.scan(body, x, (stacked_params, stacked_cache))
 
 
+def decode_cache_structs(cfg: ModelConfig, stacked_params, batch: int,
+                         prompt: int, cap: int):
+    """(cache-in, cache-out) avals of one `decode_blocks` step over a
+    (sub-)stack — the donation contract as data: the two pytrees must be
+    identical leaf for leaf (structure, shape, dtype) or a donated decode
+    step silently falls back to allocating the mismatched leaves.
+    Executors precompile against these structs; tests assert equality."""
+    dt = dtype_of(cfg.compute_dtype)
+    d = cfg.d_model
+    x = jax.ShapeDtypeStruct((batch, prompt, d), dt)
+    _, cache_in = jax.eval_shape(
+        lambda p, xx: prefill_blocks(cfg, p, xx, jnp.arange(prompt), cap=cap),
+        stacked_params, x)
+    _, cache_out = jax.eval_shape(
+        lambda p, c, xx, pp: decode_blocks(cfg, p, c, xx, pp),
+        stacked_params, cache_in,
+        jax.ShapeDtypeStruct((batch, 1, d), dt),
+        jax.ShapeDtypeStruct((), jnp.int32))
+    return cache_in, cache_out
+
+
 def decode_step(cfg: ModelConfig, params, cache, tokens, *, impl=None):
-    """One token for every sequence in the batch.  tokens: (B, 1) int32."""
+    """One token for every sequence in the batch.  tokens: (B, 1) int32.
+
+    Donation-safe like `decode_blocks`: the returned cache (including the
+    ``pos`` scalar, which aliases onto ``pos + 1``) matches the input
+    cache aval for aval, so single-device servers may donate it too."""
     compute_dt = dtype_of(cfg.compute_dtype)
     x = sc.act(jnp.take(params["embed"], tokens, axis=0).astype(compute_dt),
                "dp", None, None)

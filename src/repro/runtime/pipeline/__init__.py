@@ -56,10 +56,11 @@ def as_selection(plan):
     return sel
 
 
+from .aot import AotProgram, CompileStats, tree_add_program
 from .channels import ChannelSet, Fifo, FifoStats, StreamChannel
-from .engine import (Driver, Engine, EngineResult, EventLoop, EventLoopStats,
-                     Op, Program, StageProgram, run_event_loop,
-                     steady_inverse)
+from .engine import (AsyncResult, Driver, Engine, EngineResult, EventLoop,
+                     EventLoopStats, Op, Program, StageProgram,
+                     run_event_loop, steady_inverse)
 from .schedule import (SchedOp, Schedule, ScheduleProgram, ScheduleRun,
                        fill_drain, fill_drain_bubble, interleaved_1f1b,
                        interleaved_bubble, max_live_activations,
@@ -76,8 +77,10 @@ from .placement import Placement, StageSlice, place, tp_of
 
 __all__ = [
     "as_selection",
+    "AotProgram", "CompileStats", "tree_add_program",
     "ChannelSet", "Fifo", "FifoStats", "StreamChannel",
-    "Driver", "Engine", "EngineResult", "EventLoop", "EventLoopStats", "Op",
+    "AsyncResult", "Driver", "Engine", "EngineResult", "EventLoop",
+    "EventLoopStats", "Op",
     "Program", "StageProgram", "run_event_loop", "steady_inverse",
     "SchedOp", "Schedule", "ScheduleProgram", "ScheduleRun",
     "fill_drain", "fill_drain_bubble", "interleaved_1f1b",

@@ -25,6 +25,16 @@ Two-level buffering (the async jax path):
     overlaps the consumer's current microbatch instead of serialising with
     its next one.
 
+Donation discipline: prefetch *reads* queued buffers, so nothing that
+crosses a FIFO may ever be donated — the executors donate only buffers
+that stay resident inside one stage (KV-cache slices, the grad
+accumulator), never inter-stage activations, and their staging functions
+assert the invariant (a deleted buffer in a queue raises a descriptive
+error instead of XLA's use-after-free).  Note also that ``device_put`` to
+the producer's own device is an *alias*, not a copy: a staged token can
+share its buffer with the producer's output, which is exactly why queue
+traffic must stay donation-free.
+
 The synchronous interpreter path uses the plain ``push``/``pop`` subset,
 where dispatch and completion coincide and the two levels collapse to the
 old double-buffered FIFO semantics.
@@ -38,6 +48,18 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
+
+
+def check_not_donated(leaf, context: str) -> None:
+    """The staging-side donation guard: raise a descriptive error if a
+    queued buffer was deleted (donated) while still owned by a fifo —
+    only stage-resident buffers may be donated, never queue traffic (see
+    the module docstring's donation discipline)."""
+    if getattr(leaf, "is_deleted", lambda: False)():
+        raise RuntimeError(
+            f"prefetch on {context}: queued buffer was deleted (donated) "
+            f"while still in the fifo — only stage-resident buffers "
+            f"(cache slices, grad accumulators) may be donated")
 
 
 @dataclass

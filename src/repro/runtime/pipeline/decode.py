@@ -13,8 +13,11 @@ output*.  This module runs that shape on the same executor core:
     token-identical to `LMServer.serve_round` under greedy sampling;
   * every block stage keeps its **KV/SSM cache slice resident on its
     placement slice**: the prefill op constructs the stage's cache shard
-    on the stage's device, decode ops update it in place of the group,
-    and only the (B, 1, d_model) hidden state crosses inter-stage FIFOs;
+    on the stage's device, decode ops update it **in place** — the
+    decode program donates the incoming cache (``donate_argnums``), so
+    every leaf aliases onto the resident buffers and a token step
+    allocates no new cache memory — and only the (B, 1, d_model) hidden
+    state crosses inter-stage FIFOs;
   * request groups map to stage replicas by ``gid % nr`` (cache
     affinity), so a replicated stage serves groups concurrently exactly
     like the plan's round-robin replication;
@@ -22,7 +25,12 @@ output*.  This module runs that shape on the same executor core:
     embed stage over a `channels.StreamChannel` — the continuous
     token-stream mode: decode ops are *scheduled as tokens arrive* (the
     engine's pending-or-inflight termination), and the stream closes when
-    the last group drains.
+    the last group drains;
+  * all stage programs are `aot.AotProgram`s, AOT-compiled against each
+    group's concrete shapes before the engine's clock starts
+    (``warmup=``), and op bodies dispatch without host syncs — the
+    engine retires them off completion futures — so no served request
+    ever sees a compile or a per-op ``block_until_ready`` stall.
 
 Placement folds tp > 1 slices onto their first device (decode stage
 bodies are single-device jits; sharding decode over a sub-mesh is a
@@ -48,8 +56,9 @@ from ...core.stg import STG
 from ...models import blocks, lm
 from ...models.common import dtype_of, rmsnorm
 from ..server import _bucket            # one bucketing rule: token parity
-from .channels import Fifo, StreamChannel
-from .engine import Engine, EngineResult, Op, describe_position
+from .aot import AotProgram, CompileStats
+from .channels import Fifo, StreamChannel, check_not_donated
+from .engine import AsyncResult, Engine, EngineResult, Op, describe_position
 from .placement import Placement, place
 
 
@@ -227,14 +236,12 @@ class _ServeStageProgram:
             if kind == "P":
                 g.t_start = time.perf_counter()
                 x = jnp.asarray(g.tokens)
-                task = (_run_stage,
-                        (pipe._embed_prefill, params, (x,), dev))
+                task = (_run_stage, (pipe._embed, params, (x,), dev))
             else:
                 seq_got, (gid_got, toks) = run.feedback.pop(1)[0]
                 assert (seq_got, gid_got) == (seq, gid), \
                     f"feedback order broke: {(seq_got, gid_got)}!={(seq, gid)}"
-                task = (_run_stage,
-                        (pipe._embed_decode, params, (toks,), dev))
+                task = (_run_stage, (pipe._embed, params, (toks,), dev))
         else:
             seq_got, (gid_got, x) = run.acts[s - 1].pop_hold(1)[0]
             assert (seq_got, gid_got) == (seq, gid), \
@@ -275,18 +282,21 @@ class _ServeStageProgram:
 
 
 def _run_stage(fn, params, args, dev):
+    """Dispatch one stage program and return without a host sync: the
+    engine retires the op off the watch set's completion future.  Watch
+    the first output leaf only — a block stage's (hidden, cache) pair
+    materialises together (one executable), and the resident cache slice
+    is rebound at retirement, after that future fires."""
     args = tuple(jax.device_put(a, dev) if hasattr(a, "shape") else a
                  for a in args)
     out = fn(params, *args)
-    jax.block_until_ready(out)
-    return out, time.perf_counter()
+    return AsyncResult((out,), watch=jax.tree.leaves(out)[:1])
 
 
 def _run_stage_static_cap(fn, params, x, cap, dev):
     x = jax.device_put(x, dev)
     out = fn(params, x, cap)
-    jax.block_until_ready(out)
-    return out, time.perf_counter()
+    return AsyncResult((out,), watch=jax.tree.leaves(out)[:1])
 
 
 class _ServeRun:
@@ -368,7 +378,10 @@ class DecodePipeline:
     ``periods_per_stage`` groups adjacent block-pattern periods into one
     stage (the decode analogue of ``layers_per_stage``).  ``params``
     overrides the default `models/lm.init_params(cfg, PRNGKey(seed))` —
-    pass the single-device server's params for A/B parity.
+    pass the single-device server's params for A/B parity.  ``warmup``
+    (default True) AOT-compiles every stage program for each group shape
+    before the engine starts; ``compile_stats.late`` counts compiles
+    that landed inside a timed serve (kept at zero by the default).
     """
 
     def __init__(self, cfg: ModelConfig, stg: STG, sel, *,
@@ -376,7 +389,7 @@ class DecodePipeline:
                  capacity_blocks: int = 2, seed: int = 0,
                  overlap: bool = True, replica_queue: int = 2,
                  workers: int | None = None, params=None,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, warmup: bool = True):
         from . import as_selection
         sel = as_selection(sel)
         if cfg.encdec or cfg.frontend:
@@ -459,12 +472,33 @@ class DecodePipeline:
             self.stage_params.append(reps)
             self.period_span.append(span)
 
-        self._embed_prefill = jax.jit(_embed_prefill_fn(cfg))
-        self._embed_decode = jax.jit(_embed_prefill_fn(cfg))  # same math, (B,1)
-        self._block_prefill = jax.jit(_block_prefill_fn(cfg),
-                                      static_argnums=(2,))
-        self._block_decode = jax.jit(_block_decode_fn(cfg))
-        self._head = jax.jit(_head_fn(cfg))
+        # one embed program serves prefill AND decode traffic (one compile
+        # cache — the old pair of jax.jit instances of the same function
+        # paid two compiles for identical math whenever avals coincided).
+        # The block decode program DONATES its incoming cache slice
+        # (argnum 1): each token step aliases the update onto the resident
+        # buffers instead of allocating a fresh KV/SSM pytree per token
+        # per stage — `models/lm.decode_blocks` guarantees the returned
+        # cache matches the input structure leaf-for-leaf, so every leaf
+        # aliases.  All programs are `aot.AotProgram`s: serve() precompiles
+        # them against each group's concrete shapes before the engine's
+        # clock starts (``warmup=`` is the escape hatch; late compiles are
+        # counted in ``compile_stats.late``).
+        self.warmup = warmup
+        self.compile_stats = CompileStats()
+        self._warmed: set = set()
+        self._embed = AotProgram(_embed_prefill_fn(cfg), name="embed",
+                                 stats=self.compile_stats)
+        self._block_prefill = AotProgram(_block_prefill_fn(cfg),
+                                         name="block.prefill",
+                                         stats=self.compile_stats,
+                                         static_argnums=(2,))
+        self._block_decode = AotProgram(_block_decode_fn(cfg),
+                                        name="block.decode",
+                                        stats=self.compile_stats,
+                                        donate_argnums=(1,))
+        self._head = AotProgram(_head_fn(cfg), name="head",
+                                stats=self.compile_stats)
 
     # -- sampling -----------------------------------------------------------
     def _sample(self, logits, gid: int, temperature: float | None = None):
@@ -490,6 +524,7 @@ class DecodePipeline:
 
         def staging(tok):
             gid, y = tok
+            check_not_donated(y, f"act edge {s}->{s + 1} (gid={gid})")
             return (gid, jax.device_put(y, cons_devs[gid % cons]))
 
         slots = (prod + cons) * self.replica_queue
@@ -502,6 +537,57 @@ class DecodePipeline:
         if self.workers is not None:
             return max(1, self.workers)
         return min(16, max(2, sum(len(d) for d in self.stage_devices)))
+
+    def _warm_group_shape(self, batch: int, bucket: int, cap: int) -> None:
+        """AOT-compile every program one group shape class will execute —
+        embed/head at prefill (B, bucket) and decode (B, 1) avals, block
+        prefill with its static cap, block decode against the cache
+        struct that prefill produces — on every replica's device, plus
+        one greedy-sampler eager warm per head device.  Runs before the
+        engine's clock starts; no served request ever sees a compile."""
+        from jax.sharding import SingleDeviceSharding
+        key = (batch, bucket, cap)
+        if key in self._warmed:
+            return
+        cfg = self.cfg
+        dt = dtype_of(cfg.compute_dtype)
+        d = cfg.d_model
+        S = len(self.stage_names)
+        for s in range(S):
+            for rep, dev in enumerate(self.stage_devices[s]):
+                sh = SingleDeviceSharding(dev)
+                params = self.stage_params[s][rep]
+
+                def sds(*shape, dtype=dt):
+                    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+                if s == 0:
+                    self._embed.precompile(params, sds(batch, bucket,
+                                                       dtype=jnp.int32))
+                    self._embed.precompile(params, sds(batch, 1,
+                                                       dtype=jnp.int32))
+                elif s == S - 1:
+                    self._head.precompile(params, sds(batch, bucket, d))
+                    self._head.precompile(params, sds(batch, 1, d))
+                    if (self.temperature or 0.0) <= 0.0:
+                        # greedy sampling is eager jnp ops: execute once
+                        # per device so the op cache is warm too
+                        z = jax.device_put(
+                            jnp.zeros((batch, 1, cfg.padded_vocab), dt), dev)
+                        self._sample(z, gid=-1)
+                else:
+                    xp = sds(batch, bucket, d)
+                    self._block_prefill.precompile(params, xp, cap)
+                    _, cache_s = jax.eval_shape(
+                        lambda p, x: self._block_prefill.fn(p, x, cap),
+                        params, xp)
+                    cache_sh = jax.tree.map(
+                        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                                       sharding=sh), cache_s)
+                    self._block_decode.precompile(
+                        params, cache_sh, sds(batch, 1, d),
+                        sds(dtype=jnp.int32))
+        self._warmed.add(key)
 
     def graph_stage_map(self) -> dict[str, str]:
         """graph node -> executed stage name (block nodes collapse onto
@@ -557,6 +643,10 @@ class DecodePipeline:
                 budget=budgets, out_tokens=[None] * len(chunk)))
             group_of.extend([gid] * len(chunk))
 
+        if self.warmup:
+            for g in groups:
+                self._warm_group_shape(g.batch, g.bucket, g.cap)
+
         run = _ServeRun(self, groups, eos_id=eos_id,
                         capacity_blocks=capacity_blocks, overlap=overlap,
                         temperature=temperature)
@@ -565,7 +655,8 @@ class DecodePipeline:
         engine = Engine(run.programs, overlap=overlap,
                         workers=self._n_workers(),
                         replica_queue=self.replica_queue)
-        er = engine.run()
+        with self.compile_stats.window():
+            er = engine.run()
         assert run.feedback.exhausted, \
             "token stream not drained: a group retired with tokens in flight"
         for g in groups:                       # run-relative group timings
@@ -574,7 +665,8 @@ class DecodePipeline:
         res = ServeRunResult(
             tokens=[], group_of=group_of, groups=groups,
             stage_done_s=er.stage_done_s, stage_seconds=er.stage_seconds,
-            stage_firings=er.stage_firings, op_trace=er.op_trace,
+            stage_firings=er.stage_firings,
+            stage_dispatch_s=er.stage_dispatch_s, op_trace=er.op_trace,
             max_inflight=er.max_inflight, wall_s=er.wall_s,
             placement=self.placement)
         idx_in_group: dict[int, int] = {}

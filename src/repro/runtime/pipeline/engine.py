@@ -21,9 +21,14 @@ module owns one **`Program`** protocol and two drivers of it:
     Scans programs downstream-first, hands dispatched ops to a worker
     pool (or runs them inline under ``overlap=False``), retires them on
     completion events, releases channel credits (also on failure — no
-    leaked slots), and records completion-time streams.  Backends:
-    `jax_pipe.LMPipeline` (microbatch F/B over jax devices) and
-    `decode.DecodePipeline` (prefill/decode serving).
+    leaked slots), and records completion-time streams.  An op body may
+    return an `AsyncResult` — "dispatched to the device, not complete":
+    the worker returns immediately (no per-op ``block_until_ready`` host
+    sync) and the engine retires the op when its watch set reports ready
+    (`jax.Array.is_ready` completion futures), so a worker dispatches
+    the next op while the previous one's transfer/compute is still in
+    flight.  Backends: `jax_pipe.LMPipeline` (microbatch F/B over jax
+    devices) and `decode.DecodePipeline` (prefill/decode serving).
 
   * **`run_event_loop`** (virtual clock) — the discrete-event driver.
     Owns the heap, candidate re-queueing, wake-set propagation, and the
@@ -122,6 +127,33 @@ class Program(Protocol):
 StageProgram = Program
 
 
+class AsyncResult:
+    """An op body's non-blocking return: device work was *dispatched* but
+    not awaited.  ``payload`` is the tuple ``retire`` expects minus its
+    trailing completion timestamp (the engine appends one when completion
+    is observed); ``watch`` is a small list of duck-typed completion
+    futures — objects with ``is_ready()`` / ``block_until_ready()``
+    (`jax.Array` natively) whose readiness marks the op complete.  Watch
+    one representative output per executable, not every pytree leaf: an
+    executable's outputs materialise together, and the engine polls the
+    watch set every sweep."""
+
+    __slots__ = ("payload", "watch")
+
+    def __init__(self, payload: tuple, watch: list):
+        self.payload = payload
+        # non-device values (host numpy, float0 cotangents of integer
+        # inputs) are complete by construction — drop them from the watch
+        self.watch = [w for w in watch if hasattr(w, "is_ready")]
+
+    def is_ready(self) -> bool:
+        return all(w.is_ready() for w in self.watch)
+
+    def block(self) -> None:
+        for w in self.watch:
+            w.block_until_ready()
+
+
 def describe_position(name: str, pos: int, ops, fmt: Callable) -> str:
     """The shared ``Program.describe`` diagnostic line: a stage's schedule
     position — next op index and the op itself (``fmt``-rendered) — so
@@ -173,6 +205,11 @@ class EngineResult:
     stage_seconds: dict[str, float] = field(default_factory=dict)
     stage_firings: dict[str, int] = field(default_factory=dict)
     stage_done_s: dict[str, list[float]] = field(default_factory=dict)
+    stage_dispatch_s: dict[str, float] = field(default_factory=dict)
+    # host wall time spent *inside* op bodies (device_put + program
+    # dispatch) per stage — the host-overhead share of stage time, kept
+    # separate so dispatch cost is visible data, not folded into the
+    # measured inverse throughput
     op_trace: list = field(default_factory=list)
     # (stage, kind, seq, replica, t_dispatch, t_done) run-relative
     max_inflight: int = 0
@@ -190,6 +227,15 @@ class EngineResult:
             return (self.stage_seconds.get(name, 0.0) / n * 1e6
                     if n else float("nan"))
 
+    def stage_host_us(self, name: str) -> float:
+        """Host-side dispatch microseconds per firing of one stage: wall
+        time its op bodies spent on the host (transfers issued, program
+        dispatched) divided by firings — the overhead the async executor
+        hides under device compute, surfaced as its own number."""
+        n = self.stage_firings.get(name, 0)
+        return (self.stage_dispatch_s.get(name, 0.0) / n * 1e6
+                if n else float("nan"))
+
 
 class Engine(Driver):
     """Wall-clock driver: non-blocking scheduler over a list of `Program`s.
@@ -199,6 +245,10 @@ class Engine(Driver):
     (dispatch, block, advance).  ``replica_queue`` caps in-flight ops per
     stage replica (1 = strict serial worker, 2 = short device queue).
     """
+
+    # how long a no-progress sweep waits on worker futures before
+    # re-polling the device-completion watch sets (seconds)
+    POLL_S = 5e-4
 
     def __init__(self, programs: list, *, overlap: bool = True,
                  workers: int = 8, replica_queue: int = 2):
@@ -213,6 +263,7 @@ class Engine(Driver):
             self.result.stage_seconds[p.name] = 0.0
             self.result.stage_firings[p.name] = 0
             self.result.stage_done_s[p.name] = []
+            self.result.stage_dispatch_s[p.name] = 0.0
 
     def _retire(self, op: Op, result) -> None:
         prog = self.programs[op.stage]
@@ -228,6 +279,13 @@ class Engine(Driver):
         res.op_trace.append((prog.name, op.kind, op.seq, op.rep,
                              op.t_dispatch - self.t0, t_done - self.t0))
 
+    def _settle(self, op: Op, result, t_done: float) -> None:
+        """Retire a completed op, unwrapping an `AsyncResult` by appending
+        the observed completion timestamp to its payload."""
+        if isinstance(result, AsyncResult):
+            result = result.payload + (t_done,)
+        self._retire(op, result)
+
     def _abort(self, op: Op) -> None:
         """An op's body raised: free its channel credits and busy slot so
         the failure surfaces as the exception, not as a leaked-slot
@@ -236,15 +294,29 @@ class Engine(Driver):
             fifo.release(n)
         self._busy[op.stage][op.rep] -= 1
 
+    @staticmethod
+    def _timed(fn, args):
+        """Worker-side wrapper: run the op body and measure the host wall
+        time it spent (the dispatch-overhead sample for ``stage_host_us``;
+        under async bodies this is pure host work — the device part is in
+        flight when the body returns)."""
+        t0 = time.perf_counter()
+        result = fn(*args)
+        return result, time.perf_counter() - t0
+
     def run(self) -> EngineResult:
         from concurrent.futures import (FIRST_COMPLETED, ThreadPoolExecutor,
                                         wait)
         self.t0 = time.perf_counter()
-        inflight: dict = {}                 # future -> Op
+        inflight: dict = {}                 # future -> Op (worker running)
+        pending: list = []                  # (Op, AsyncResult): body returned,
+        #                                     device work still in flight
         pool = ThreadPoolExecutor(max_workers=self.workers) \
             if self.overlap else None
+        dispatch_s = self.result.stage_dispatch_s
         try:
-            while any(p.pending() for p in self.programs) or inflight:
+            while (any(p.pending() for p in self.programs)
+                   or inflight or pending):
                 progressed = False
                 # downstream-first: consumers drain fifos before producers
                 for s in reversed(range(len(self.programs))):
@@ -261,35 +333,80 @@ class Engine(Driver):
                     self._busy[s][op.rep] += 1
                     progressed = True
                     if pool is None:
+                        # serial A/B baseline: dispatch, await, advance
                         try:
-                            result = fn(*args)
+                            result, host_s = self._timed(fn, args)
                         except BaseException:
                             self._abort(op)
                             raise
-                        self._retire(op, result)
+                        dispatch_s[prog.name] += host_s
+                        if isinstance(result, AsyncResult):
+                            try:        # a device error surfaces here —
+                                result.block()   # free credits like the
+                            except BaseException:  # old in-body sync did
+                                self._abort(op)
+                                raise
+                        self._settle(op, result, time.perf_counter())
                     else:
-                        inflight[pool.submit(fn, *args)] = op
+                        inflight[pool.submit(self._timed, fn, args)] = op
                         self.result.max_inflight = max(
-                            self.result.max_inflight, len(inflight))
-                done = [f for f in inflight if f.done()]
-                if not progressed and not done and inflight:
-                    done, _ = wait(list(inflight),
-                                   return_when=FIRST_COMPLETED)
-                for f in done:
+                            self.result.max_inflight,
+                            len(inflight) + len(pending))
+                # drain worker futures: a body either completed its op
+                # synchronously (host compute) or handed back an
+                # AsyncResult whose device work we watch below
+                for f in [f for f in inflight if f.done()]:
                     op = inflight.pop(f)
                     try:
-                        result = f.result()
+                        result, host_s = f.result()
                     except BaseException:
                         self._abort(op)
                         raise
-                    self._retire(op, result)
-                    progressed = True
+                    dispatch_s[self.programs[op.stage].name] += host_s
+                    if isinstance(result, AsyncResult):
+                        pending.append((op, result))
+                    else:
+                        self._settle(op, result, time.perf_counter())
+                        progressed = True
+                # retire device completions (completion futures, no host
+                # sync): ready watch sets observed this sweep
+                if pending:
+                    now = time.perf_counter()
+                    still = []
+                    for op, ar in pending:
+                        if ar.is_ready():
+                            self._settle(op, ar, now)
+                            progressed = True
+                        else:
+                            still.append((op, ar))
+                    pending = still
                 if not progressed:
-                    state = "; ".join(p.describe() for p in self.programs)
-                    raise RuntimeError(
-                        f"pipeline deadlock: no program can dispatch and "
-                        f"nothing is in flight — schedule/backpressure "
-                        f"bug ({state})")
+                    if inflight:
+                        # with device work pending, wait bounded (a watch
+                        # set may become ready before any worker future);
+                        # with none, block until a worker finishes — no
+                        # busy-poll stealing host CPU from the op bodies
+                        wait(list(inflight),
+                             timeout=self.POLL_S if pending else None,
+                             return_when=FIRST_COMPLETED)
+                    elif pending:
+                        # nothing dispatchable, no workers running: block
+                        # on the oldest in-flight device op for an
+                        # accurate completion timestamp
+                        op, ar = pending.pop(0)
+                        try:
+                            ar.block()
+                        except BaseException:
+                            self._abort(op)
+                            raise
+                        self._settle(op, ar, time.perf_counter())
+                    else:
+                        state = "; ".join(p.describe()
+                                          for p in self.programs)
+                        raise RuntimeError(
+                            f"pipeline deadlock: no program can dispatch "
+                            f"and nothing is in flight — "
+                            f"schedule/backpressure bug ({state})")
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)

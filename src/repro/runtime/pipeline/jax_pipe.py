@@ -33,10 +33,24 @@ shared with the host interpreter and the decode serving pipeline.
 
 Execution is *overlapped* by default (``overlap=True``): the engine never
 blocks on an op — each firing is handed to a small worker pool that
-dispatches the jax computation and retires it on completion, so a
-replicated stage's microbatches run concurrently across its replica
-slices (measured inverse throughput reads ii/nr, like the interpreter
-path) and the host scheduling loop itself hides inside device compute.
+dispatches the jax computation *and returns without a host sync*
+(`engine.AsyncResult`); the engine retires ops off completion futures
+(`jax.Array.is_ready`), so a worker launches the next op while the
+previous one's transfer/compute is still in flight, a replicated stage's
+microbatches run concurrently across its replica slices (measured
+inverse throughput reads ii/nr, like the interpreter path), and the host
+scheduling loop itself hides inside device compute.
+
+The steady state is zero-copy and compile-free: stage programs are
+`aot.AotProgram`s — ahead-of-time ``.lower(...).compile()`` executables
+per (aval, sharding), precompiled against the run's concrete shapes
+before the engine's clock starts (``warmup=``; `compile_stats.late`
+counts what a disabled warmup lets land inside the window) — and
+gradient accumulation is a donated in-place ``acc <- acc + p_bar``
+program resident on each stage's ``grad_target()``, bitwise-equal to
+the per-leaf host-driven adds it replaced.  The training vjp chain
+keeps its eager `jax.vjp` call structure (the bitwise contract with
+sequential-autodiff references) and warms by execution instead.
 Inter-stage buffers are two-level host+device FIFOs (`channels.Fifo`): a
 slot is occupied from producer *dispatch* to consumer *retirement*, so
 channel capacity bounds total in-flight work per edge (bounded device
@@ -66,7 +80,8 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import (NamedSharding, PartitionSpec as P,
+                          SingleDeviceSharding)
 
 from ...configs.base import ModelConfig
 from ...core.stg import STG, Selection
@@ -74,8 +89,9 @@ from ...launch.mesh import submesh_of
 from ...launch.sharding import ShardingPolicy, stage_param_shardings
 from ...models import blocks
 from ...models.common import KeyGen, dense_init, rmsnorm
-from .channels import Fifo
-from .engine import Engine, Op, describe_position, steady_inverse
+from .aot import AotProgram, CompileStats, tree_add_program
+from .channels import Fifo, check_not_donated
+from .engine import AsyncResult, Engine, Op, describe_position, steady_inverse
 from .placement import Placement, place
 from .schedule import (SchedOp, Schedule, fill_drain, max_live_by_chunk,
                        one_f_one_b)
@@ -95,12 +111,17 @@ def selection_from_plan(plan) -> Selection:
 @dataclass
 class LMStage:
     name: str
-    fwd: object                  # jitted (params, x) -> y
+    fwd: object                  # (params, x) -> y: an `aot.AotProgram`
+                                 # (drop-in for the jit it replaces —
+                                 # traceable under vjp, AOT-compiled for
+                                 # concrete serve-path calls)
     params: dict                 # replica index -> pytree on that slice
     devices: list                # replica index -> first jax.Device
     x_shardings: list = None     # replica index -> NamedSharding (tp-sharded
                                  # slices) or None (single-device placement)
     meshes: list = None          # replica index -> sub-mesh or None
+    acc: object = None           # donated grad accumulator (aot.tree_add):
+                                 # acc <- acc + p_bar in place on grad_target
 
     def x_target(self, rep: int):
         """Where replica ``rep``'s inputs must live: the sub-mesh's
@@ -108,6 +129,12 @@ class LMStage:
         if self.x_shardings and self.x_shardings[rep] is not None:
             return self.x_shardings[rep]
         return self.devices[rep]
+
+    def x_sharding(self, rep: int):
+        """``x_target`` as a `Sharding` (for ShapeDtypeStruct lowering)."""
+        tgt = self.x_target(rep)
+        return tgt if isinstance(tgt, NamedSharding) \
+            else SingleDeviceSharding(tgt)
 
     def grad_target(self):
         """Where accumulated grads live: replica 0's param shardings for a
@@ -202,6 +229,7 @@ class LMPipelineResult:
     stage_seconds: dict[str, float] = field(default_factory=dict)
     stage_firings: dict[str, int] = field(default_factory=dict)
     stage_done_s: dict[str, list[float]] = field(default_factory=dict)
+    stage_dispatch_s: dict[str, float] = field(default_factory=dict)
     mb_done_s: list[float] = field(default_factory=list)
     wall_s: float = 0.0
     placement: Placement | None = None
@@ -232,6 +260,15 @@ class LMPipelineResult:
             n = self.stage_firings.get(name, 0)
             return self.stage_seconds[name] / n * 1e6 if n else float("nan")
 
+    def stage_host_us(self, name: str) -> float:
+        """Host-side dispatch microseconds per firing (wall time the
+        stage's op bodies spent issuing transfers and dispatching
+        programs) — the overhead component `measure.compare_lm` surfaces
+        as its own column instead of folding into stage II."""
+        n = self.stage_firings.get(name, 0)
+        return (self.stage_dispatch_s.get(name, 0.0) / n * 1e6
+                if n else float("nan"))
+
     def tokens_per_s(self, toks_per_mb: int) -> float:
         """Steady-state tokens/s from inter-microbatch completion gaps.
         Short runs (< 3 completed microbatches) still exclude the pipeline
@@ -249,16 +286,23 @@ class LMPipelineResult:
 
 
 # ===========================================================================
-# op bodies (run on the engine's dispatch pool under overlap)
+# op bodies (run on the engine's dispatch pool under overlap).  Bodies
+# DISPATCH device work and return immediately (`engine.AsyncResult`):
+# the engine retires the op when the watch set reports ready, so a
+# worker is free to launch the next op while this one's transfer/compute
+# is still in flight.  Watch one representative output per executable —
+# an executable's outputs materialise together.
 # ===========================================================================
 def _fwd_op(st: LMStage, rep: int, x, train: bool):
     x = jax.device_put(x, st.x_target(rep))
     if train:
+        # traced path: AotProgram falls through to its jit, keeping the
+        # vjp call structure (and grads) bitwise-identical to sequential
+        # autodiff references built from the same stage fns
         y, vjp = jax.vjp(st.fwd, st.params[rep], x)
     else:
         y, vjp = st.fwd(st.params[rep], x), None
-    jax.block_until_ready(y)
-    return y, vjp, time.perf_counter()
+    return AsyncResult((y, vjp), watch=[y])
 
 
 def _bwd_op(st: LMStage, rep: int, vjp, y_bar, logits, loss_fn):
@@ -271,8 +315,10 @@ def _bwd_op(st: LMStage, rep: int, vjp, y_bar, logits, loss_fn):
     else:
         y_bar = jax.device_put(y_bar, st.x_target(rep))
     p_bar, x_bar = vjp(y_bar)
-    jax.block_until_ready(x_bar)
-    return p_bar, x_bar, lval, time.perf_counter()
+    watch = [x_bar, jax.tree.leaves(p_bar)[-1]]
+    if lval is not None:
+        watch.append(lval)
+    return AsyncResult((p_bar, x_bar, lval), watch=watch)
 
 
 # ===========================================================================
@@ -423,9 +469,13 @@ class _LMStageProgram:
                 pb = buf.pop(nxt[i])
                 nxt[i] += 1
                 pb = jax.device_put(pb, st.grad_target())
+                # donated in-place accumulate: ONE compiled program whose
+                # output aliases the resident acc buffer (st.acc), not a
+                # host-driven per-leaf dispatch allocating a fresh pytree
+                # per microbatch — bitwise-identical fold order
                 self.grads[st.name] = (
                     pb if self.grads[st.name] is None else
-                    jax.tree.map(jnp.add, self.grads[st.name], pb))
+                    st.acc(self.grads[st.name], pb))
         return t_done
 
     def describe(self) -> str:
@@ -447,7 +497,10 @@ class LMPipeline:
     default `schedule.Schedule` object ``run`` executes (per-run
     ``schedule=`` overrides it; None picks `schedule.one_f_one_b` for
     training and `schedule.fill_drain` for serving) — schedules are
-    plan data, never generated here.
+    plan data, never generated here.  ``warmup`` (default True)
+    precompiles every program a run shape needs before the engine's
+    clock starts; ``compile_stats`` reports compiles and the ``late``
+    count (compiles that landed inside a timed window).
     """
 
     def __init__(self, cfg: ModelConfig, stg: STG, sel: Selection, *,
@@ -456,7 +509,7 @@ class LMPipeline:
                  overlap: bool = True, prefetch_blocks: int = 1,
                  replica_queue: int = 2, workers: int | None = None,
                  policy: ShardingPolicy | None = None,
-                 schedule: Schedule | None = None):
+                 schedule: Schedule | None = None, warmup: bool = True):
         self.cfg = cfg
         self.schedule = schedule
         devices = list(devices if devices is not None else jax.devices())
@@ -466,6 +519,9 @@ class LMPipeline:
         self.overlap = overlap
         self.prefetch_blocks = prefetch_blocks
         self.replica_queue = max(1, replica_queue)
+        self.warmup = warmup
+        self.compile_stats = CompileStats()
+        self._warmed: set = set()
         policy = policy or ShardingPolicy(fsdp=False, tp=True)
         # map lm_graph node names onto built stages: embed/head by name,
         # blockNN graph nodes collapse onto the built group that owns them
@@ -532,9 +588,12 @@ class LMPipeline:
             if not devs:
                 devs, meshes, x_shs = [devices[0]], [None], [None]
                 reps = {0: jax.device_put(init_params[name], devices[0])}
-            self.stages.append(LMStage(name=name, fwd=jax.jit(fwds[name]),
-                                       params=reps, devices=devs,
-                                       x_shardings=x_shs, meshes=meshes))
+            self.stages.append(LMStage(
+                name=name,
+                fwd=AotProgram(fwds[name], name=f"{name}.fwd",
+                               stats=self.compile_stats),
+                params=reps, devices=devs, x_shardings=x_shs, meshes=meshes,
+                acc=tree_add_program(f"{name}.acc", self.compile_stats)))
         self.capacity_blocks = capacity_blocks
         self.workers = workers
 
@@ -572,6 +631,7 @@ class LMPipeline:
 
         def staging(tok):
             mb, y = tok
+            check_not_donated(y, f"act edge ->{consumer.name} (mb={mb})")
             return (mb, jax.device_put(y, consumer.x_target(mb % nrep)))
 
         slots = (len(producer.devices) + len(consumer.devices)) \
@@ -609,6 +669,74 @@ class LMPipeline:
                 f" — mismatched with train={train}")
         return schedule.validate()
 
+    def _warm_run(self, mb, train: bool, loss_fn) -> None:
+        """Ensure every program this run's shape will execute is compiled
+        BEFORE the engine's clock starts (the ``warmup=`` escape hatch
+        skips this; `compile_stats.late` then counts what landed inside
+        the window).
+
+        Serve shapes are true AOT: each stage forward is
+        ``.lower(...).compile()``-ed against its concrete param placement
+        and a sharded activation struct — nothing executes.  The train
+        chain keeps its eager ``jax.vjp`` call structure (the bitwise
+        contract with sequential-autodiff references forbids re-jitting
+        it), so its jit caches warm by executing one zeros microbatch
+        through F/B on every replica off the clock, and the donated
+        accumulator is AOT-compiled from the real grad avals that run
+        produces."""
+        # key on the loss function's CODE object (shared by every instance
+        # of the same lambda, so per-step closures don't re-trigger the
+        # full eager warm or pin each closure; not id(), which a collected
+        # lambda can recycle into a false warm hit)
+        key = (tuple(mb.shape), str(mb.dtype), train,
+               getattr(loss_fn, "__code__", loss_fn))
+        if key in self._warmed:
+            return
+        if not train:
+            struct = jax.ShapeDtypeStruct(mb.shape, mb.dtype)
+            for st in self.stages:
+                out = None
+                for rep in range(len(st.devices)):
+                    s_rep = jax.ShapeDtypeStruct(
+                        struct.shape, struct.dtype,
+                        sharding=st.x_sharding(rep))
+                    if isinstance(st.fwd, AotProgram):
+                        st.fwd.precompile(st.params[rep], s_rep)
+                    if out is None:
+                        out = jax.eval_shape(st.fwd, st.params[rep], s_rep)
+                struct = out
+            self._warmed.add(key)
+            return
+        t0 = time.perf_counter()
+        x = jnp.zeros(mb.shape, mb.dtype)
+        per_stage = []
+        for st in self.stages:
+            outs = {}
+            for rep in range(len(st.devices)):
+                xr = jax.device_put(x, st.x_target(rep))
+                outs[rep] = jax.vjp(st.fwd, st.params[rep], xr)
+            per_stage.append(outs)
+            x = outs[0][0]
+        y_bar = None
+        for si in reversed(range(len(self.stages))):
+            st = self.stages[si]
+            nxt_bar = None
+            for rep, (y, vjp) in per_stage[si].items():
+                if si == len(self.stages) - 1:
+                    yb = (jax.value_and_grad(loss_fn)(y)[1] if loss_fn
+                          else jnp.ones_like(y))
+                else:
+                    yb = jax.device_put(y_bar, st.x_target(rep))
+                pb, xb = vjp(yb)
+                if rep == 0:
+                    pb_t = jax.device_put(pb, st.grad_target())
+                    st.acc.precompile(pb_t, pb_t)
+                    nxt_bar = xb
+            y_bar = nxt_bar
+        jax.block_until_ready(y_bar)
+        self.compile_stats.warm_exec_s += time.perf_counter() - t0
+        self._warmed.add(key)
+
     def run(self, microbatches: list, *, train: bool = False,
             loss_fn=None, overlap: bool | None = None,
             schedule: Schedule | None = None) -> LMPipelineResult:
@@ -631,6 +759,8 @@ class LMPipeline:
         M = self.n_stages
         sched = self._resolve_schedule(schedule, n_micro, train)
         p = sched.n_stages
+        if self.warmup and microbatches:
+            self._warm_run(microbatches[0], train, loss_fn)
 
         acts = [self._edge_fifo(self.stages[i], self.stages[i + 1], overlap)
                 for i in range(M - 1)]             # i -> i+1 activations
@@ -653,10 +783,12 @@ class LMPipeline:
         engine = Engine(programs, overlap=overlap,
                         workers=self._n_workers(),
                         replica_queue=self.replica_queue)
-        er = engine.run()
+        with self.compile_stats.window():
+            er = engine.run()
         res.stage_seconds = er.stage_seconds
         res.stage_firings = er.stage_firings
         res.stage_done_s = er.stage_done_s
+        res.stage_dispatch_s = er.stage_dispatch_s
         res.op_trace = er.op_trace
         res.max_inflight = er.max_inflight
 

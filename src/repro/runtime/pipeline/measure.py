@@ -41,6 +41,10 @@ class StageMeasurement:
     measured_v: float          # cycles/firing the pipeline sustained
     replicas: int
     utilization: float
+    host_v: float | None = None    # host dispatch overhead per firing (us,
+    #                                wall-clock backends; None under the
+    #                                virtual clock) — dispatch cost as its
+    #                                own column, not folded into measured_v
 
     @property
     def ratio(self) -> float:
@@ -80,7 +84,8 @@ class PipelineReport:
                            "measured_v": m.measured_v,
                            "ratio": m.ratio,
                            "replicas": m.replicas,
-                           "utilization": m.utilization}
+                           "utilization": m.utilization,
+                           "host_us": m.host_v}
                        for n, m in self.stages.items()},
         }, indent=2)
 
@@ -88,6 +93,8 @@ class PipelineReport:
         rows = [f"  {m.stage}: model {m.analytic_v:.3g} vs measured "
                 f"{m.measured_v:.3g} cyc/firing (x{m.ratio:.2f}), "
                 f"util {m.utilization:.0%}"
+                + (f", host {m.host_v:.0f}us/firing"
+                   if m.host_v is not None else "")
                 for m in sorted(self.stages.values(), key=lambda m: -m.ratio)]
         return (f"pipeline: v_app measured {self.v_app_measured:.3g} vs model "
                 f"{self.v_app_analytic:.3g} ({self.accuracy:.2f}x), "
@@ -105,6 +112,7 @@ def _build_report(stg: STG, sel: Selection, *,
                   util_of: Callable[[str], float],
                   fifo_stalls: int, oversubscription: float,
                   skip_kinds: tuple = (),
+                  host_of: Callable[[str], float | None] = lambda name: None,
                   err_noun: str = "firings",
                   err_hint: Callable[[dict], str] = lambda counts: "") \
         -> PipelineReport:
@@ -133,7 +141,7 @@ def _build_report(stg: STG, sel: Selection, *,
         impl = sel.impl_of(stg, name)
         rep.stages[name] = StageMeasurement(
             stage=name, analytic_v=impl.ii / nr, measured_v=measured,
-            replicas=nr, utilization=util_of(name))
+            replicas=nr, utilization=util_of(name), host_v=host_of(name))
         # normalise to graph iterations for the app-level number
         v_iter = measured * q[name]
         if v_iter > worst_v:
@@ -216,9 +224,15 @@ def compare_lm(stg: STG, sel: Selection, res,
         nr = sel.replicas(name)
         return min(1.0, busy / (res.wall_s * nr)) if res.wall_s > 0 else 0.0
 
+    def host_of(name: str) -> float | None:
+        # host dispatch us/firing off the engine's per-op accounting
+        # (`EngineResult.stage_host_us`); nan -> None (stage never fired)
+        v = res.stage_host_us(exec_name(name))
+        return None if v != v else v
+
     return _build_report(
         stg, sel, measured_of=measured_of, firings_of=firings_of,
-        util_of=util_of_nr,
+        util_of=util_of_nr, host_of=host_of,
         fifo_stalls=sum(s.producer_stalls for s in res.fifo_stats.values()),
         oversubscription=(res.placement.oversubscription
                           if res.placement else 1.0),

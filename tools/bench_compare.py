@@ -1,0 +1,145 @@
+"""Diff a benchmark run against a committed baseline — the perf gate.
+
+Compares every ``BENCH_*.json`` in ``--new`` against the file of the same
+name in ``--baseline``, matching rows by (workload, backend/path) and
+diffing three metric families:
+
+  * **tokens/s** (``decode_tok_per_s``, ``prefill_tok_per_s``,
+    ``measured_tokens_per_s``) — higher is better; a regression beyond
+    ``--tolerance`` (default 20%) **fails** the run (exit 1);
+  * **measured bubble** (``bubble_1f1b``, ``bubble_interleaved``) —
+    lower is better; beyond-tolerance regressions warn (``--strict``
+    escalates warnings to failures);
+  * **per-stage inverse throughput / host overhead** (``per_stage_us``,
+    ``per_stage_host_us`` dicts) — lower is better; warns like bubble.
+
+Wall-clock rates are host-dependent: a committed baseline is only
+comparable on a similar host, which is why the PR-CI gate REGENERATES
+its baseline — it re-runs the smoke benches from the PR's merge-base on
+the same runner and compares that same-host pair (the committed
+`benchmarks/baseline-smoke/` is the fallback when the base tree predates
+the smoke mode, and the local runbook reference).  Refresh the committed
+baselines after an intentional perf change with::
+
+    PYTHONPATH=src python -m benchmarks.run --json-dir benchmarks/baseline
+    PYTHONPATH=src python -m benchmarks.run pipeline serve --smoke \
+        --json-dir benchmarks/baseline-smoke
+
+Usage::
+
+    python tools/bench_compare.py --baseline benchmarks/baseline-smoke \
+        --new bench-artifacts [--tolerance 0.2] [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# metric name -> direction ("up" = higher is better), gate class
+RATE_METRICS = {                      # regressions FAIL
+    "decode_tok_per_s": "up",
+    "prefill_tok_per_s": "up",
+    "measured_tokens_per_s": "up",
+}
+SOFT_METRICS = {                      # regressions WARN (fail with --strict)
+    "bubble_1f1b": "down",
+    "bubble_interleaved": "down",
+    "v_measured": "down",
+}
+DICT_METRICS = ("per_stage_us", "per_stage_host_us")   # down, soft
+
+
+def _row_key(row: dict) -> tuple:
+    return (row.get("workload", "?"), row.get("backend", row.get("path", "?")))
+
+
+def _index(rows: list) -> dict:
+    return {_row_key(r): r for r in rows if isinstance(r, dict)}
+
+
+def _regression(direction: str, base: float, new: float) -> float:
+    """Fractional regression (positive = worse), direction-normalised."""
+    if not isinstance(base, (int, float)) or not isinstance(new, (int, float)):
+        return 0.0
+    if base <= 0:
+        return 0.0
+    delta = (base - new) / base if direction == "up" else (new - base) / base
+    return delta
+
+
+def compare_dirs(baseline_dir: str, new_dir: str, tolerance: float,
+                 strict: bool = False, verbose: bool = True):
+    """Returns (failures, warnings, compared) as lists of report lines."""
+    failures, warnings, compared = [], [], []
+
+    def check(name, key, metric, direction, base, new, hard):
+        reg = _regression(direction, base, new)
+        line = (f"{name} {key[0]}/{key[1]} {metric}: "
+                f"{base:.4g} -> {new:.4g} ({-reg:+.1%})")
+        compared.append(line)
+        if reg > tolerance:
+            (failures if hard or strict else warnings).append(line)
+
+    names = sorted(f for f in os.listdir(new_dir)
+                   if f.startswith("BENCH_") and f.endswith(".json"))
+    for name in names:
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(base_path):
+            warnings.append(f"{name}: no baseline file (new bench? refresh "
+                            f"the baseline to start its trajectory)")
+            continue
+        with open(base_path) as f:
+            base_rows = _index(json.load(f))
+        with open(os.path.join(new_dir, name)) as f:
+            new_rows = _index(json.load(f))
+        for key, nrow in new_rows.items():
+            brow = base_rows.get(key)
+            if brow is None:
+                continue                      # workload not in baseline
+            for metric, direction in RATE_METRICS.items():
+                if metric in nrow and metric in brow:
+                    check(name, key, metric, direction,
+                          brow[metric], nrow[metric], hard=True)
+            for metric, direction in SOFT_METRICS.items():
+                if metric in nrow and metric in brow:
+                    check(name, key, metric, direction,
+                          brow[metric], nrow[metric], hard=False)
+            for metric in DICT_METRICS:
+                bd, nd = brow.get(metric), nrow.get(metric)
+                if isinstance(bd, dict) and isinstance(nd, dict):
+                    for stage in sorted(set(bd) & set(nd)):
+                        check(name, key, f"{metric}[{stage}]", "down",
+                              bd[stage], nd[stage], hard=False)
+    if verbose:
+        for line in compared:
+            print(f"  {line}")
+        for line in warnings:
+            print(f"WARN {line}")
+        for line in failures:
+            print(f"FAIL {line}")
+    return failures, warnings, compared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="directory of committed BENCH_*.json")
+    ap.add_argument("--new", required=True,
+                    help="directory of freshly generated BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression (default 0.2)")
+    ap.add_argument("--strict", action="store_true",
+                    help="escalate soft-metric warnings to failures")
+    args = ap.parse_args(argv)
+    failures, warnings_, compared = compare_dirs(
+        args.baseline, args.new, args.tolerance, strict=args.strict)
+    print(f"\nbench_compare: {len(compared)} metrics compared, "
+          f"{len(warnings_)} warnings, {len(failures)} failures "
+          f"(tolerance {args.tolerance:.0%})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
