@@ -30,7 +30,8 @@ def _jpeg_rows():
     from repro.core.stg import Selection
     from repro.core.throughput import analyze
     from repro.graphs import jpeg
-    from repro.runtime.pipeline import compare, execute
+    from repro.runtime.pipeline import (Tracer, compare, execute,
+                                        stall_bottleneck)
 
     g = jpeg.build_stg()
     blocks = jpeg.random_blocks(256)
@@ -42,7 +43,11 @@ def _jpeg_rows():
         "solver_v2": heuristic.min_area(g, 2, JPEG_CALIBRATED).selection,
     }
     for name, sel in sels.items():
-        run = execute(g, sel, {"camera": blocks}, fj=JPEG_CALIBRATED)
+        # the virtual clock is deterministic: tracing the measured run
+        # itself costs nothing and cannot move the cycle counts
+        tr = Tracer()
+        run = execute(g, sel, {"camera": blocks}, fj=JPEG_CALIBRATED,
+                      tracer=tr)
         rep = compare(g, sel, run)
         rows.append({
             "workload": f"jpeg/{name}",
@@ -51,6 +56,11 @@ def _jpeg_rows():
             "v_measured": rep.v_app_measured,
             "accuracy": rep.accuracy,
             "bottleneck": rep.bottleneck_measured,
+            "stall_bottleneck": stall_bottleneck(tr),
+            "per_stage_stall_cycles": {
+                s: m.stall_v for s, m in rep.stages.items()},
+            "per_stage_starve_cycles": {
+                s: m.starve_v for s, m in rep.stages.items()},
             "fifo_stalls": rep.fifo_stalls,
         })
     return rows

@@ -20,6 +20,16 @@ regression.  Rows also carry per-stage host dispatch overhead
 accounting) so host-side regressions are visible separately from stage
 inverse throughput.
 
+Observability surface: the pipelined row includes serving SLO
+percentiles (queue wait / TTFT / inter-token gap p50/p95/p99, from
+`ServeRunResult.slo()`), per-stage stall/starve milliseconds and the
+stall-attributed bottleneck from a traced replay, and a Chrome-trace /
+Perfetto export written next to the JSON (``*_trace.json``; open at
+https://ui.perfetto.dev).  ``--smoke`` additionally gates the tracing
+overhead: best-of-N traced decode tokens/s must stay within 3% of
+best-of-N untraced, and the stall bottleneck must land in the analytic
+ranking's top tier.
+
     PYTHONPATH=src python -m benchmarks.bench_serve [--json out.json]
                                                     [--smoke]
 """
@@ -30,6 +40,24 @@ import sys
 import time
 
 import numpy as np
+
+
+def _check_trace(tracer, pipe) -> None:
+    """The export contract: at least one op track per (stage, replica)
+    that retired work, a waits track where stalls happened, and a counter
+    track per watched fifo."""
+    ct = tracer.to_chrome_trace()
+    tracks = {e["args"]["name"] for e in ct["traceEvents"]
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    for track in tracer.n_retire:
+        assert track in tracks, f"no track for {track}"
+    for stage in pipe.stage_names:
+        assert any(t.startswith(stage + "/r") for t in tracks), \
+            f"stage {stage} has no replica track"
+    counters = {e["name"] for e in ct["traceEvents"] if e["ph"] == "C"}
+    assert counters >= {f"fifo {lbl}" for lbl in tracer.fifo_watch}, \
+        f"missing fifo counter tracks: {counters}"
+    json.dumps(ct)
 
 
 def _percentiles(samples_s: list[float]) -> tuple[float, float]:
@@ -45,8 +73,11 @@ def run(verbose: bool = True, json_path: str | None = None,
     from repro.configs.base import ShapeCfg
     from repro.configs.tiny import CONFIG as tiny
     from repro.core import planner
+    from repro.core.throughput import analyze
     from repro.graphs import lm_graph
-    from repro.runtime.pipeline import DecodePipeline
+    from repro.runtime.pipeline import (DecodePipeline, Tracer,
+                                        selection_from_plan,
+                                        stall_bottleneck)
     from repro.runtime.server import LMServer, Request
 
     shape = ShapeCfg("bench_serve", 64, 16, "decode")
@@ -105,6 +136,65 @@ def run(verbose: bool = True, json_path: str | None = None,
         f"compiles landed inside the timed serve: {pipe.compile_stats.summary()}"
     for c, toks in zip(ref_out, run_res.tokens):
         assert c.tokens == toks, "pipelined backend diverged from reference"
+    # -- traced replay: observability surface -------------------------------
+    # fresh tracer (aggregates accumulate across runs sharing one), same
+    # workload — stall/starve attribution and the Perfetto export come
+    # from this arm so the reported rates above stay trace-free
+    tracer = Tracer()
+    traced_res = pipe.serve([r.prompt for r in reqs],
+                            [r.max_new for r in reqs], group_size=group,
+                            tracer=tracer)
+    assert traced_res.tokens == run_res.tokens, \
+        "tracing changed the generated tokens"
+    _check_trace(tracer, pipe)
+    stall_ms = {s: 1e3 * d.get("credit", 0.0)
+                for s, d in traced_res.stage_wait_s.items()}
+    starve_ms = {s: 1e3 * (d.get("starve", 0.0) + d.get("reorder", 0.0))
+                 for s, d in traced_res.stage_wait_s.items()}
+    measured_btl = stall_bottleneck(tracer)
+
+    trace_path = None
+    if json_path:
+        trace_path = (json_path[:-5] if json_path.endswith(".json")
+                      else json_path) + "_trace.json"
+        tracer.save(trace_path)
+
+    if smoke:
+        # the stall ranking must finger the analytic ranking's top tier
+        # (the tiny plan's block stages tie at the analytic top, so any
+        # of them is a correct answer — embed/head would not be)
+        a = analyze(stg, selection_from_plan(plan))
+        graph_of = {v: k for k, v in pipe.graph_stage_map().items()}
+        top = {n for n, v in a.node_iter_time.items()
+               if v >= 0.99 * max(a.node_iter_time.values())}
+        assert graph_of.get(measured_btl) in top, \
+            (f"stall bottleneck {measured_btl} not in analytic top tier "
+             f"{sorted(top)}")
+        # tracing overhead gate.  Single-serve tokens/s swings +-10% on a
+        # shared host, so the estimator is built to find the noise
+        # ceiling of each arm rather than trust one sample: a longer
+        # decode window than the A/B rows (more tokens per sample),
+        # interleaved traced/plain pairs (shared host drift), best-of-N
+        # per arm, and one best-of-5 escalation before failing.
+        prompts = [r.prompt for r in reqs]
+        deep = 48
+        pipe.serve(prompts, deep, group_size=group)     # warm the shape
+        plain_best = traced_best = 0.0
+        for i in range(5):
+            traced_best = max(traced_best, pipe.serve(
+                prompts, deep, group_size=group,
+                tracer=Tracer()).decode_tokens_per_s())
+            plain_best = max(plain_best, pipe.serve(
+                prompts, deep, group_size=group).decode_tokens_per_s())
+            if i >= 2 and 1.0 - traced_best / plain_best < 0.03:
+                break
+        overhead = 1.0 - traced_best / plain_best
+        assert overhead < 0.03, \
+            (f"tracing overhead {overhead:.1%} >= 3% "
+             f"({traced_best:.1f} vs {plain_best:.1f} tok/s)")
+    assert pipe.compile_stats.late == 0, \
+        f"compiles landed inside a timed serve: {pipe.compile_stats.summary()}"
+
     p50, p95 = _percentiles(run_res.token_latencies_s())
     rows.append({
         "workload": workload,
@@ -121,6 +211,11 @@ def run(verbose: bool = True, json_path: str | None = None,
         "wall_s": run_res.wall_s,
         "per_stage_host_us": {n: run_res.stage_host_us(n)
                               for n in pipe.stage_names},
+        "per_stage_stall_ms": stall_ms,
+        "per_stage_starve_ms": starve_ms,
+        "stall_bottleneck": measured_btl,
+        "slo": run_res.slo(),
+        "trace_json": trace_path,
         "compile_stats": pipe.compile_stats.summary(),
         "groups": len(run_res.groups),
         "planned_stage_replicas": {sp.name: sp.replicas
@@ -131,12 +226,19 @@ def run(verbose: bool = True, json_path: str | None = None,
                 "real pipelining on multi-device pools",
     })
 
+    for k, v in rows[-1]["slo"].items():
+        rows[-1][k] = v                    # flat copies for bench_compare
+
     if verbose:
         for r in rows:
             print(f"{r['workload']:14s} {r['backend']:14s} "
                   f"decode {r['decode_tok_per_s']:8.1f} tok/s | "
                   f"token p50 {r['p50_token_ms']:6.1f} ms "
                   f"p95 {r['p95_token_ms']:6.1f} ms | wall {r['wall_s']:.2f}s")
+        if rows[-1].get("stall_bottleneck"):
+            print(f"stall bottleneck: {rows[-1]['stall_bottleneck']} | "
+                  f"ttft p95 {rows[-1]['ttft_p95_ms']:.1f} ms | "
+                  f"token gap p99 {rows[-1]['token_gap_p99_ms']:.1f} ms")
         print(json.dumps(rows, indent=2))
     if json_path:
         with open(json_path, "w") as f:

@@ -14,6 +14,11 @@ groups stream concurrently through the stages, per-stage KV-cache slices
 stay resident on their placement slices, and sampled tokens feed back
 over a continuous token-stream channel.  Completions are token-identical
 to the single-device backend under greedy sampling.
+
+``--trace out.json`` (with ``--pipeline``) records the serve through the
+runtime tracer and exports a Chrome-trace JSON — open it in Perfetto or
+chrome://tracing to see one lane per (stage, replica), wait spans
+annotated with the blamed FIFO, and FIFO-occupancy counter tracks.
 """
 import sys
 
@@ -29,7 +34,7 @@ from repro.core import planner
 from repro.runtime.server import LMServer, Request
 
 
-def main(pipeline: bool = False):
+def main(pipeline: bool = False, trace_path: str | None = None):
     arch = "qwen2.5-3b"
     cfg_full = get_config(arch)
 
@@ -60,13 +65,27 @@ def main(pipeline: bool = False):
         print("pipelined backend:")
         print(pipe.placement.summary())
         print()
-    srv = LMServer(cfg, max_batch=4, temperature=0.0, pipeline=pipe)
+    tracer = None
+    if trace_path is not None:
+        if pipe is None:
+            sys.exit("--trace needs --pipeline (the single-device backend "
+                     "has no stage pipeline to trace)")
+        from repro.runtime.pipeline import Tracer
+        tracer = Tracer()
+    srv = LMServer(cfg, max_batch=4, temperature=0.0, pipeline=pipe,
+                   tracer=tracer)
     outs = srv.serve(reqs)
     for c in outs[:3]:
         print(f"req {c.uid}: {c.prompt_len} prompt tok -> "
               f"{len(c.tokens)} generated {c.tokens[:8]}...")
     print(json.dumps(srv.stats.summary(), indent=1))
+    if tracer is not None:
+        tracer.save(trace_path)
+        print(f"wrote Chrome trace to {trace_path} "
+              f"(open in Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":
-    main(pipeline="--pipeline" in sys.argv)
+    args = sys.argv[1:]
+    trace = args[args.index("--trace") + 1] if "--trace" in args else None
+    main(pipeline="--pipeline" in args, trace_path=trace)

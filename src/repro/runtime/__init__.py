@@ -1,7 +1,9 @@
 from . import pipeline
 from .failures import FailureInjector, SimulatedNodeFailure
-from .straggler import StragglerMonitor
+from .straggler import (StragglerMonitor, StragglerReport,
+                        detect_replica_stragglers)
 from .trainer import TrainLoopConfig, run_resilient, train_loop
 
 __all__ = ["FailureInjector", "SimulatedNodeFailure", "StragglerMonitor",
+           "StragglerReport", "detect_replica_stragglers",
            "TrainLoopConfig", "run_resilient", "train_loop", "pipeline"]

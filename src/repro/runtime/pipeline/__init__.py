@@ -74,6 +74,11 @@ from .measure import (FixedPointResult, PipelineReport, StageMeasurement,
                       calibrate, compare, compare_lm, measured_bubble,
                       measured_replan, replan_to_fixed_point)
 from .placement import Placement, StageSlice, place, tp_of
+from .trace import FifoWatch, TraceEvent, Tracer
+from .metrics import (BlameEntry, Counter, Gauge, Histogram, MetricsRegistry,
+                      attribute_bottleneck, registry_from_trace, serving_slo,
+                      stall_bottleneck)
+from ..straggler import StragglerReport, detect_replica_stragglers
 
 __all__ = [
     "as_selection",
@@ -93,4 +98,9 @@ __all__ = [
     "compare", "compare_lm", "measured_bubble", "measured_replan",
     "replan_to_fixed_point",
     "Placement", "StageSlice", "place", "tp_of",
+    "FifoWatch", "TraceEvent", "Tracer",
+    "BlameEntry", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "attribute_bottleneck", "registry_from_trace", "serving_slo",
+    "stall_bottleneck",
+    "StragglerReport", "detect_replica_stragglers",
 ]

@@ -82,6 +82,12 @@ class Fifo:
     it to issue the consumer-side device transfer early.
     """
 
+    # set via `trace.Tracer.watch_fifo`: a watched fifo emits an
+    # occupancy counter event on every push/pop (class-level None keeps
+    # the unwatched hot path to one attribute load per operation)
+    tracer = None
+    label: str | None = None
+
     def __init__(self, block: int = 1, capacity_blocks: int = 2,
                  min_capacity: int = 0, prefetch_fn=None,
                  prefetch_depth: int = 1):
@@ -149,6 +155,9 @@ class Fifo:
             self._q.append((t, ready_time))
         self.stats.pushes += len(tokens)
         self.stats.high_water = max(self.stats.high_water, len(self._q))
+        if self.tracer is not None:
+            self.tracer.fifo_event("push", self.label or "fifo",
+                                   len(self._q))
         self._note_inflight()
         self._maybe_prefetch()
 
@@ -170,6 +179,9 @@ class Fifo:
         self.stats.pops += n
         self._prefetched = max(0, self._prefetched - n)
         out = [self._q.popleft()[0] for _ in range(n)]
+        if self.tracer is not None:
+            self.tracer.fifo_event("pop", self.label or "fifo",
+                                   len(self._q))
         self._maybe_prefetch()
         return out
 

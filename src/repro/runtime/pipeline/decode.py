@@ -173,6 +173,18 @@ class ServeRunResult(EngineResult):
             out.extend(b - a for a, b in zip(ts, ts[1:]))
         return out
 
+    def slo(self) -> dict:
+        """Per-request serving SLO percentiles (flat ms dict): queue wait
+        (submit -> first prefill dispatch), TTFT (submit -> first sampled
+        token), and inter-token gap — `metrics.serving_slo` over the
+        group timings.  Groups are the unit a client slot experiences, so
+        samples are per group, gaps per decoded token."""
+        from .metrics import serving_slo
+        return serving_slo(
+            queue_wait_s=[g.t_start for g in self.groups],
+            ttft_s=[g.t_prefill_done for g in self.groups],
+            token_gap_s=self.token_latencies_s())
+
 
 # ===========================================================================
 # stage programs
@@ -197,6 +209,7 @@ class _ServeStageProgram:
         self.queue: list = []          # (kind, gid, seq, pos)
         self.pos_i = 0
         self.stall_mark = -1
+        self.wait_reason = None   # (reason, fifo) of the last deferral
         self.caches: dict[int, object] = {}    # gid -> resident cache slice
 
     def enqueue(self, kind: str, gid: int, seq: int, pos: int) -> None:
@@ -215,13 +228,16 @@ class _ServeStageProgram:
     def ready(self, op: Op, count_stall: bool = False) -> float | None:
         s, S, run = self.s, self.S, self.run
         if s > 0 and not run.acts[s - 1].can_pop(1):
+            self.wait_reason = ("starve", run.acts[s - 1])
             return None
         if s == 0 and op.kind == "D" and not run.feedback.can_pop(1):
+            self.wait_reason = ("starve", run.feedback)
             return None
         if s < S - 1 and not run.acts[s].can_push(1):
             if self.stall_mark != self.pos_i:
                 self.stall_mark = self.pos_i
                 run.acts[s].note_stall()
+            self.wait_reason = ("credit", run.acts[s])
             return None
         return 0.0
 
@@ -608,13 +624,17 @@ class DecodePipeline:
     def serve(self, prompts: list[list[int]], max_new, *, eos_id: int = 1,
               group_size: int = 8, capacity_blocks: int = 2,
               overlap: bool | None = None,
-              temperature: float | None = None) -> ServeRunResult:
+              temperature: float | None = None,
+              tracer=None) -> ServeRunResult:
         """Serve ``prompts`` in ``group_size`` slot groups streamed
         concurrently through the pipeline.  Grouping, bucketing, and
         EOS/budget bookkeeping mirror `LMServer.serve_round` on each
         group, so a single-device server with ``max_batch=group_size``
         produces token-identical completions.  ``temperature`` overrides
-        the pipeline-level default for this run."""
+        the pipeline-level default for this run.  ``tracer``: optional
+        `trace.Tracer` — the serve emits op spans, credit/starve waits,
+        and fifo occupancy (incl. the head->embed feedback stream);
+        warmup stays untraced."""
         if not prompts:
             raise ValueError("serve() needs at least one prompt")
         overlap = self.overlap if overlap is None else overlap
@@ -650,11 +670,21 @@ class DecodePipeline:
         run = _ServeRun(self, groups, eos_id=eos_id,
                         capacity_blocks=capacity_blocks, overlap=overlap,
                         temperature=temperature)
+        names = self.stage_names
+        fifo_map = {f"act{s}": run.acts[s] for s in range(len(run.acts))}
+        fifo_map["feedback"] = run.feedback
+        if tracer is not None:
+            for s in range(len(run.acts)):
+                tracer.watch_fifo(run.acts[s], f"act{s}",
+                                  src=names[s], dst=names[s + 1])
+            tracer.watch_fifo(run.feedback, "feedback",
+                              src=names[-1], dst=names[0])
         for g in groups:
             run.enqueue("P", g.gid, 0)
         engine = Engine(run.programs, overlap=overlap,
                         workers=self._n_workers(),
-                        replica_queue=self.replica_queue)
+                        replica_queue=self.replica_queue,
+                        tracer=tracer, fifos=fifo_map)
         with self.compile_stats.window():
             er = engine.run()
         assert run.feedback.exhausted, \
@@ -668,6 +698,7 @@ class DecodePipeline:
             stage_firings=er.stage_firings,
             stage_dispatch_s=er.stage_dispatch_s, op_trace=er.op_trace,
             max_inflight=er.max_inflight, wall_s=er.wall_s,
+            stage_wait_s=er.stage_wait_s,
             placement=self.placement)
         idx_in_group: dict[int, int] = {}
         for gid in group_of:

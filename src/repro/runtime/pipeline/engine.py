@@ -169,13 +169,17 @@ class Driver:
     overflow, and each fifo stays seq-sorted no matter which replica
     retires first), wake hooks (virtual domain: which programs to
     re-examine after a retirement; wall domain: a no-op — the engine
-    rescans every sweep), and busy accounting."""
+    rescans every sweep), busy accounting, and the shared tracing hook:
+    a `trace.Tracer` attached here makes BOTH drivers emit the same
+    typed event stream (op dispatch/retire spans, credit/starve/reorder
+    waits) for the same `Program`."""
 
     virtual: bool = False
 
-    def __init__(self):
+    def __init__(self, tracer=None):
         self._reorder: dict[int, tuple[dict, list]] = {}
         self.t0 = 0.0
+        self.tracer = tracer
 
     def ordered_push(self, fifo: Fifo, seq: int, tok, t_done: float) -> None:
         """Stage an out-of-order completion so ``fifo`` receives tokens in
@@ -192,6 +196,24 @@ class Driver:
 
     def note_busy(self, name: str, amount: float) -> None:
         pass
+
+    def wait_reason_of(self, prog) -> tuple[str, str]:
+        """Classify why ``prog`` just deferred: programs leave a
+        ``wait_reason = (reason, fifo)`` breadcrumb when ``ready``
+        returns None; the driver refines an input-empty wait into a
+        *reorder* wait when the tokens exist but sit in its reorder
+        buffer (an out-of-order replica retirement, not a rate
+        mismatch).  Returns ``(reason, edge_label)``."""
+        r = getattr(prog, "wait_reason", None)
+        if not r:
+            return ("blocked", "")
+        reason, fifo = r
+        label = getattr(fifo, "label", None) or "" if fifo is not None else ""
+        if reason == "starve" and fifo is not None:
+            pend = self._reorder.get(id(fifo))
+            if pend and pend[0]:
+                reason = "reorder"
+        return (reason, label)
 
 
 # ===========================================================================
@@ -214,6 +236,11 @@ class EngineResult:
     # (stage, kind, seq, replica, t_dispatch, t_done) run-relative
     max_inflight: int = 0
     wall_s: float = 0.0
+    stage_wait_s: dict[str, dict[str, float]] = field(default_factory=dict)
+    # stage -> {reason: seconds blocked} — credit (output full) vs starve
+    # (input empty) vs reorder attribution; populated only when the run
+    # was traced (the accounting rides the tracer's enable flag so the
+    # default path stays untouched)
 
     def stage_inverse_us(self, name: str) -> float:
         """Steady-state microseconds per firing of one stage (merged
@@ -251,9 +278,15 @@ class Engine(Driver):
     POLL_S = 5e-4
 
     def __init__(self, programs: list, *, overlap: bool = True,
-                 workers: int = 8, replica_queue: int = 2):
-        super().__init__()
+                 workers: int = 8, replica_queue: int = 2,
+                 tracer=None, fifos: dict | None = None):
+        """``tracer``: optional `trace.Tracer` — op spans, wait spans, and
+        per-stage stall/starve accounting (off = zero-cost path).
+        ``fifos``: {label: Fifo} for the deadlock report's occupancy
+        snapshot (independent of tracing)."""
+        super().__init__(tracer)
         self.programs = list(programs)
+        self.fifos = dict(fifos or {})
         self.overlap = overlap
         self.workers = max(1, workers)
         self.replica_queue = max(1, replica_queue)
@@ -278,6 +311,10 @@ class Engine(Driver):
         res.stage_firings[prog.name] += 1
         res.op_trace.append((prog.name, op.kind, op.seq, op.rep,
                              op.t_dispatch - self.t0, t_done - self.t0))
+        if self.tracer is not None:
+            self.tracer.op_retire(prog.name, op.rep, op.kind, op.seq,
+                                  op.chunk, op.t_dispatch - self.t0,
+                                  t_done - self.t0)
 
     def _settle(self, op: Op, result, t_done: float) -> None:
         """Retire a completed op, unwrapping an `AsyncResult` by appending
@@ -293,6 +330,37 @@ class Engine(Driver):
         for fifo, n in op.releases:
             fifo.release(n)
         self._busy[op.stage][op.rep] -= 1
+
+    def _deadlock_detail(self) -> str:
+        """Hang forensics appended to the deadlock error: what each party
+        was *waiting on* — every registered fifo's occupancy (queued/cap
+        plus in-flight slots) and, when traced, the last few events per
+        stuck stage — not just the schedule position."""
+        lines: list[str] = []
+        if self.fifos:
+            occ = []
+            for label, f in sorted(self.fifos.items()):
+                s = f"{label}={len(f)}/{f.capacity}"
+                if f.inflight_slots:
+                    s += f"(+{f.inflight_slots} in flight)"
+                occ.append(s)
+            lines.append("fifo occupancy: " + ", ".join(occ))
+        elif self.tracer is not None and self.tracer.fifo_watch:
+            lines.append("fifo occupancy: "
+                         + ", ".join(self.tracer.fifo_snapshot()))
+        for p in self.programs:
+            if not p.pending():
+                continue
+            reason, edge = self.wait_reason_of(p)
+            lines.append(f"{p.name} waiting: {reason}"
+                         + (f" on {edge}" if edge else ""))
+            if self.tracer is not None:
+                tail = self.tracer.tail(p.name, n=4)
+                if tail:
+                    lines.append(f"last events {p.name}: " + "; ".join(
+                        f"{e.kind} {e.name}{e.seq if e.seq >= 0 else ''}"
+                        f"@{e.t:.4g}" for e in tail))
+        return "".join("\n  " + ln for ln in lines)
 
     @staticmethod
     def _timed(fn, args):
@@ -314,6 +382,13 @@ class Engine(Driver):
         pool = ThreadPoolExecutor(max_workers=self.workers) \
             if self.overlap else None
         dispatch_s = self.result.stage_dispatch_s
+        tr = self.tracer
+        if tr is not None:
+            tr.bind_wall(self.t0)
+        # per-stage open blocked span: (t_blocked, (reason, edge)) — set
+        # the first sweep a stage's next op defers, closed (one wait
+        # event + stall/starve seconds) when the op finally dispatches
+        wait_since: list = [None] * len(self.programs)
         try:
             while (any(p.pending() for p in self.programs)
                    or inflight or pending):
@@ -327,11 +402,25 @@ class Engine(Driver):
                     if self._busy[s][op.rep] >= self.replica_queue:
                         continue
                     if prog.ready(op) is None:
+                        if tr is not None and wait_since[s] is None:
+                            wait_since[s] = (time.perf_counter() - self.t0,
+                                             self.wait_reason_of(prog))
                         continue
                     fn, args = prog.dispatch(op, self)
                     op.t_dispatch = time.perf_counter()
                     self._busy[s][op.rep] += 1
                     progressed = True
+                    if tr is not None:
+                        td = op.t_dispatch - self.t0
+                        if wait_since[s] is not None:
+                            t_w, (reason, edge) = wait_since[s]
+                            wait_since[s] = None
+                            tr.wait(prog.name, reason, edge, t_w, td)
+                            d = self.result.stage_wait_s.setdefault(
+                                prog.name, {})
+                            d[reason] = d.get(reason, 0.0) + (td - t_w)
+                        tr.op_dispatch(prog.name, op.rep, op.kind,
+                                       op.seq, op.chunk, td)
                     if pool is None:
                         # serial A/B baseline: dispatch, await, advance
                         try:
@@ -406,7 +495,8 @@ class Engine(Driver):
                         raise RuntimeError(
                             f"pipeline deadlock: no program can dispatch "
                             f"and nothing is in flight — "
-                            f"schedule/backpressure bug ({state})")
+                            f"schedule/backpressure bug ({state})"
+                            + self._deadlock_detail())
         finally:
             if pool is not None:
                 pool.shutdown(wait=True)
@@ -425,6 +515,9 @@ class EventLoopStats:
     cycles: float = 0.0
     total_fired: int = 0
     hit_cycle_cap: bool = False
+    wait_cycles: dict[str, dict[str, float]] = field(default_factory=dict)
+    # stage -> {reason: cycles blocked} — the virtual-clock twin of
+    # `EngineResult.stage_wait_s`; populated only under a tracer
 
 
 class EventLoop(Driver):
@@ -441,8 +534,8 @@ class EventLoop(Driver):
 
     virtual = True
 
-    def __init__(self, programs: dict[str, Program]):
-        super().__init__()
+    def __init__(self, programs: dict[str, Program], tracer=None):
+        super().__init__(tracer)
         self.programs = dict(programs)
         self.now = 0.0
         self._wake: set[str] = set()
@@ -457,6 +550,13 @@ class EventLoop(Driver):
             max_cycles: float = 1e12) -> EventLoopStats:
         programs = self.programs
         self.stats = stats = EventLoopStats()
+        tr = self.tracer
+        if tr is not None:
+            tr.bind_virtual(self)
+        # open blocked spans, as in the wall-clock engine: set on the
+        # heap-pop re-check (a *real* deferral, same count_stall
+        # semantics as FifoStats), closed at the next fire
+        wait_since: dict[str, tuple] = {}
         for n in programs:
             stats.fire_times[n] = []
             stats.fired[n] = 0
@@ -475,6 +575,11 @@ class EventLoop(Driver):
             if t is not None:
                 heapq.heappush(heap, (t, seq, name))
                 seq += 1
+            elif tr is not None and name not in wait_since:
+                # blocked at wake time: open its wait span now — a later
+                # wake (or pop re-check) requeues it and the span closes
+                # at its next fire
+                wait_since[name] = (self.now, self.wait_reason_of(prog))
 
         for n in programs:
             push_candidate(n)
@@ -490,6 +595,8 @@ class EventLoop(Driver):
                 continue        # completed since queueing
             t = prog.ready(op, count_stall=True)
             if t is None:
+                if tr is not None and name not in wait_since:
+                    wait_since[name] = (now, self.wait_reason_of(prog))
                 continue        # became blocked; a wake requeues it
             if t > now:
                 heapq.heappush(heap, (t, seq, name))
@@ -499,8 +606,19 @@ class EventLoop(Driver):
             self._wake = set()
             fn, args = prog.dispatch(op, self)
             op.t_dispatch = now
+            if tr is not None:
+                ws = wait_since.pop(name, None)
+                if ws is not None:
+                    t_w, (reason, edge) = ws
+                    tr.wait(name, reason, edge, t_w, now)
+                    d = stats.wait_cycles.setdefault(name, {})
+                    d[reason] = d.get(reason, 0.0) + (now - t_w)
+                tr.op_dispatch(name, op.rep, op.kind, op.seq, op.chunk, now)
             result = fn(*args)
             done = prog.retire(op, result, self)
+            if tr is not None:
+                tr.op_retire(name, op.rep, op.kind, op.seq, op.chunk,
+                             now, done)
             for fifo, n_rel in op.releases:
                 fifo.release(n_rel)
             stats.fired[name] += 1
@@ -515,8 +633,9 @@ class EventLoop(Driver):
 
 def run_event_loop(programs: dict[str, Program], *,
                    max_firings: int = 1_000_000,
-                   max_cycles: float = 1e12) -> EventLoopStats:
+                   max_cycles: float = 1e12,
+                   tracer=None) -> EventLoopStats:
     """Drive `Program`s to quiescence under a virtual clock (the
     functional entry point over `EventLoop`)."""
-    return EventLoop(programs).run(max_firings=max_firings,
-                                   max_cycles=max_cycles)
+    return EventLoop(programs, tracer).run(max_firings=max_firings,
+                                           max_cycles=max_cycles)

@@ -52,6 +52,10 @@ class PipelineRun:
     channels: ChannelSet | None = None
     replica_map: dict[str, list[str]] = field(default_factory=dict)
     busy_cycles: dict[str, float] = field(default_factory=dict)
+    wait_cycles: dict[str, dict[str, float]] = field(default_factory=dict)
+    # worker -> {reason: cycles blocked} (traced runs only): credit =
+    # output fifo full, starve = input empty — measure's stall/starve
+    # columns under the virtual clock
 
     def inverse_throughput(self, worker: str, warmup_frac: float = 0.25) -> float:
         """Steady-state cycles per firing at one worker (drop pipeline fill)."""
@@ -84,12 +88,15 @@ class PipelineRun:
 def execute(stg: STG, sel, inputs: dict[str, list], *,
             devices=None, capacity_blocks: int = 2,
             fj: ForkJoinModel = LITERAL, max_firings: int = 1_000_000,
-            max_cycles: float = 1e12) -> PipelineRun:
+            max_cycles: float = 1e12, tracer=None) -> PipelineRun:
     """Materialise, place, and stream ``inputs`` through the pipeline.
 
     ``sel`` may be a Selection, a planner PlanResult, or a solver
     TradeoffResult — materialised through the package-level
-    `as_selection` helper (the same rule the jax path uses)."""
+    `as_selection` helper (the same rule the jax path uses).
+    ``tracer``: optional `trace.Tracer` — the virtual-clock run emits
+    the same typed event stream as the wall-clock backends (op spans in
+    cycles, credit/starve waits, fifo occupancy counters)."""
     from . import as_selection
     sel = as_selection(sel)
     rg: ReplicatedGraph = materialize(stg, sel, fj)
@@ -102,7 +109,7 @@ def execute(stg: STG, sel, inputs: dict[str, list], *,
     return execute_materialized(rg, pl, inputs,
                                 capacity_blocks=capacity_blocks,
                                 max_firings=max_firings,
-                                max_cycles=max_cycles)
+                                max_cycles=max_cycles, tracer=tracer)
 
 
 class _HostNode:
@@ -129,6 +136,7 @@ class _HostNode:
         self.out_chs = g.out_channels(name)
         self.slice = ctx.pl.slices.get(name)
         self._wake_pending: set[str] = set()
+        self.wait_reason = None   # (reason, fifo) of the last deferral
 
     def _required_out_ports(self) -> list[int]:
         if self.node.kind == FORK:
@@ -167,12 +175,14 @@ class _HostNode:
             n_need = node.out_rates[0]
             if name not in ctx.src_streams or \
                     ctx.src_pos[name] + n_need > len(ctx.src_streams[name]):
+                self.wait_reason = ("source", None)    # end of stream
                 return None
         elif node.kind == JOIN:
             k = ctx.state[name] or 0
             q = ctx.cs[self.in_chs[k].key()]
             rt = q.ready_time(node.in_rates[k])
             if rt is None:
+                self.wait_reason = ("starve", q)
                 return None
             t = max(t, rt)
         else:
@@ -180,6 +190,7 @@ class _HostNode:
                 q = ctx.cs[ch.key()]
                 rt = q.ready_time(node.in_rates[ch.dst_port])
                 if rt is None:
+                    self.wait_reason = ("starve", q)
                     return None
                 t = max(t, rt)
         # backpressure: every port fired into must have block space now
@@ -190,6 +201,7 @@ class _HostNode:
                 if not q.can_push(node.out_rates[ch.src_port]):
                     if count_stall:
                         q.note_stall()
+                    self.wait_reason = ("credit", q)
                     return None
         return t
 
@@ -280,7 +292,8 @@ def execute_materialized(rg: ReplicatedGraph, pl: Placement,
                          inputs: dict[str, list], *,
                          capacity_blocks: int = 2,
                          max_firings: int = 1_000_000,
-                         max_cycles: float = 1e12) -> PipelineRun:
+                         max_cycles: float = 1e12,
+                         tracer=None) -> PipelineRun:
     g = rg.stg
     for n in inputs:
         if n not in g.nodes:
@@ -291,6 +304,11 @@ def execute_materialized(rg: ReplicatedGraph, pl: Placement,
     run = PipelineRun(placement=pl, replica_map=dict(rg.replica_map))
     cs = ChannelSet.for_graph(g, capacity_blocks=capacity_blocks)
     run.channels = cs
+    if tracer is not None:
+        for key, fifo in cs.fifos.items():
+            src_n, sp, dst_n, dp = key
+            tracer.watch_fifo(fifo, f"{src_n}.{sp}->{dst_n}.{dp}",
+                              src=src_n, dst=dst_n)
 
     dev_free: dict = {}
     dev_workers: dict = {}
@@ -309,12 +327,13 @@ def execute_materialized(rg: ReplicatedGraph, pl: Placement,
 
     programs = {n: _HostNode(i, n, ctx) for i, n in enumerate(g.nodes)}
     stats = run_event_loop(programs, max_firings=max_firings,
-                           max_cycles=max_cycles)
+                           max_cycles=max_cycles, tracer=tracer)
     run.outputs = ctx.outputs
     run.fire_times = stats.fire_times
     run.fired = stats.fired
     run.busy_cycles = stats.busy_cycles
     run.cycles = stats.cycles
+    run.wait_cycles = stats.wait_cycles
     # wedge guard: the loop ending with a full source block unconsumed means
     # no node could ever fire again (undersized buffer / malformed graph) —
     # fail loudly rather than hand back a silently-truncated stream.  Not a

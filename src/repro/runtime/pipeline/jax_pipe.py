@@ -235,6 +235,10 @@ class LMPipelineResult:
     placement: Placement | None = None
     grads: dict | None = None               # stage -> pytree (train runs)
     fifo_stats: dict = field(default_factory=dict)   # edge label -> FifoStats
+    stage_wait_s: dict = field(default_factory=dict)
+    # stage -> {reason: seconds blocked} (traced runs only): "credit" =
+    # output fifo full (downstream slow), "starve" = input empty
+    # (upstream slow), "reorder"/"dep" = ordering, not capacity
     max_inflight: int = 0                   # peak concurrently in-flight ops
     op_trace: list = field(default_factory=list)
     # (stage, kind, mb, replica, t_dispatch, t_done) per op, run-relative —
@@ -352,6 +356,7 @@ class _LMStageProgram:
         self.ops = ops                      # list[SchedOp]
         self.pos = 0
         self.stall_mark = -1
+        self.wait_reason = None   # (reason, fifo) of the last deferral
         self.acts = acts
         self.grds = grds
         self.res = res
@@ -385,25 +390,32 @@ class _LMStageProgram:
     def ready(self, op: Op, count_stall: bool = False) -> float | None:
         """None while blocked on tokens/credits; counts a producer stall
         the first time a given op is deferred purely by output-buffer
-        backpressure."""
+        backpressure.  Each None leaves a ``wait_reason`` breadcrumb —
+        (reason, blocking fifo) — the tracing driver turns into
+        stall/starve attribution."""
         i, M, mb = self.chunks[op.chunk], self.M, op.seq
         if op.kind == "F":
             if i > 0 and not self.acts[i - 1].can_pop(1):
+                self.wait_reason = ("starve", self.acts[i - 1])
                 return None
             if i < M - 1 and not self.acts[i].can_push(1):
                 if self.stall_mark != self.pos:
                     self.stall_mark = self.pos
                     self.acts[i].note_stall()
+                self.wait_reason = ("credit", self.acts[i])
                 return None               # backpressure: skip this turn
         else:
             if (i, mb) not in self.vjps:
+                self.wait_reason = ("dep", None)
                 return None               # forward still in flight
             if i < M - 1 and not self.grds[i].can_pop(1):
+                self.wait_reason = ("starve", self.grds[i])
                 return None
             if i > 0 and not self.grds[i - 1].can_push(1):
                 if self.stall_mark != self.pos:
                     self.stall_mark = self.pos
                     self.grds[i - 1].note_stall()
+                self.wait_reason = ("credit", self.grds[i - 1])
                 return None
         return 0.0
 
@@ -739,7 +751,8 @@ class LMPipeline:
 
     def run(self, microbatches: list, *, train: bool = False,
             loss_fn=None, overlap: bool | None = None,
-            schedule: Schedule | None = None) -> LMPipelineResult:
+            schedule: Schedule | None = None,
+            tracer=None) -> LMPipelineResult:
         """Stream microbatches through the pipeline under ``schedule``.
 
         Serving (train=False) defaults to `schedule.fill_drain` streaming
@@ -752,7 +765,11 @@ class LMPipeline:
         ``p * v == n_stages``) runs v virtual-stage chunks per physical
         program over the same FIFO chain — grads stay bitwise-equal to
         the plain schedules.  ``overlap`` overrides the pipeline-level
-        knob for this run (the benchmark's A/B switch).
+        knob for this run (the benchmark's A/B switch).  ``tracer``: an
+        optional `trace.Tracer` — the run emits dispatch/retire spans,
+        credit/starve waits, and fifo occupancy counters, and fills
+        ``res.stage_wait_s``; warmup stays untraced so the aggregates
+        cover only the timed window.
         """
         overlap = self.overlap if overlap is None else overlap
         n_micro = len(microbatches)
@@ -766,6 +783,20 @@ class LMPipeline:
                 for i in range(M - 1)]             # i -> i+1 activations
         grds = [self._edge_fifo(self.stages[i + 1], self.stages[i], overlap)
                 for i in range(M - 1)] if train else None
+        fifo_map = {}
+        for i in range(M - 1):
+            fifo_map[f"act{i}"] = acts[i]
+            if grds is not None:
+                fifo_map[f"grd{i}"] = grds[i]
+        if tracer is not None:
+            for i in range(M - 1):
+                tracer.watch_fifo(acts[i], f"act{i}",
+                                  src=self.stages[i].name,
+                                  dst=self.stages[i + 1].name)
+                if grds is not None:
+                    tracer.watch_fifo(grds[i], f"grd{i}",
+                                      src=self.stages[i + 1].name,
+                                      dst=self.stages[i].name)
         res = LMPipelineResult(outputs=[None] * n_micro,
                                placement=self.placement)
         grads = {st.name: None for st in self.stages} if train else None
@@ -782,9 +813,11 @@ class LMPipeline:
             for s in range(p)]
         engine = Engine(programs, overlap=overlap,
                         workers=self._n_workers(),
-                        replica_queue=self.replica_queue)
+                        replica_queue=self.replica_queue,
+                        tracer=tracer, fifos=fifo_map)
         with self.compile_stats.window():
             er = engine.run()
+        res.stage_wait_s = er.stage_wait_s
         res.stage_seconds = er.stage_seconds
         res.stage_firings = er.stage_firings
         res.stage_done_s = er.stage_done_s

@@ -45,6 +45,13 @@ class StageMeasurement:
     #                                wall-clock backends; None under the
     #                                virtual clock) — dispatch cost as its
     #                                own column, not folded into measured_v
+    stall_v: float | None = None   # total time blocked on a full output
+    #                                fifo (credit wait: downstream is the
+    #                                bottleneck) — native unit (s wall /
+    #                                cycles virtual); None when untraced
+    starve_v: float | None = None  # total time blocked on an empty input
+    #                                fifo (starve + reorder wait: upstream
+    #                                is the bottleneck); None when untraced
 
     @property
     def ratio(self) -> float:
@@ -60,6 +67,9 @@ class PipelineReport:
     bottleneck_measured: str | None = None
     fifo_stalls: int = 0
     oversubscription: float = 1.0
+    slo: dict | None = None        # serving-SLO percentiles (flat ms dict,
+    #                                `metrics.serving_slo`) when the run
+    #                                was a serve; None for batch runs
 
     @property
     def accuracy(self) -> float:
@@ -72,7 +82,16 @@ class PipelineReport:
         return {s.stage: s.ratio for s in self.stages.values()}
 
     def to_json(self) -> str:
-        return json.dumps({
+        # per-stage metrics that never fired (host on the virtual clock,
+        # stall/starve on untraced runs) are omitted, not emitted as null
+        def stage_dict(m: StageMeasurement) -> dict:
+            d = {"analytic_v": m.analytic_v, "measured_v": m.measured_v,
+                 "ratio": m.ratio, "replicas": m.replicas,
+                 "utilization": m.utilization, "host_us": m.host_v,
+                 "stall": m.stall_v, "starve": m.starve_v}
+            return {k: v for k, v in d.items() if v is not None}
+
+        top = {
             "v_app_analytic": self.v_app_analytic,
             "v_app_measured": self.v_app_measured,
             "accuracy": self.accuracy,
@@ -80,27 +99,38 @@ class PipelineReport:
             "bottleneck_measured": self.bottleneck_measured,
             "fifo_stalls": self.fifo_stalls,
             "oversubscription": self.oversubscription,
-            "stages": {n: {"analytic_v": m.analytic_v,
-                           "measured_v": m.measured_v,
-                           "ratio": m.ratio,
-                           "replicas": m.replicas,
-                           "utilization": m.utilization,
-                           "host_us": m.host_v}
-                       for n, m in self.stages.items()},
-        }, indent=2)
+            "stages": {n: stage_dict(m) for n, m in self.stages.items()},
+        }
+        if self.slo is not None:
+            top["slo"] = self.slo
+        return json.dumps(top, indent=2)
 
     def summary(self) -> str:
+        def cols(m: StageMeasurement) -> str:
+            # host always gets a column; `-` marks not-applicable (virtual
+            # clock) so rows stay alignable.  stall/starve appear only on
+            # traced runs — total blocked time in the run's native unit.
+            out = (f", host {m.host_v:.0f}us/firing"
+                   if m.host_v is not None else ", host -")
+            if m.stall_v is not None:
+                out += f", stall {m.stall_v:.3g}"
+            if m.starve_v is not None:
+                out += f", starve {m.starve_v:.3g}"
+            return out
+
         rows = [f"  {m.stage}: model {m.analytic_v:.3g} vs measured "
                 f"{m.measured_v:.3g} cyc/firing (x{m.ratio:.2f}), "
-                f"util {m.utilization:.0%}"
-                + (f", host {m.host_v:.0f}us/firing"
-                   if m.host_v is not None else "")
+                f"util {m.utilization:.0%}" + cols(m)
                 for m in sorted(self.stages.values(), key=lambda m: -m.ratio)]
-        return (f"pipeline: v_app measured {self.v_app_measured:.3g} vs model "
+        head = (f"pipeline: v_app measured {self.v_app_measured:.3g} vs model "
                 f"{self.v_app_analytic:.3g} ({self.accuracy:.2f}x), "
                 f"bottleneck {self.bottleneck_measured} "
                 f"(model said {self.bottleneck_analytic}), "
-                f"{self.fifo_stalls} fifo stalls\n" + "\n".join(rows))
+                f"{self.fifo_stalls} fifo stalls")
+        if self.slo is not None:
+            head += ("\n  slo: " + ", ".join(
+                f"{k}={v:.2f}" for k, v in self.slo.items()))
+        return head + "\n" + "\n".join(rows)
 
 
 # ===========================================================================
@@ -113,6 +143,8 @@ def _build_report(stg: STG, sel: Selection, *,
                   fifo_stalls: int, oversubscription: float,
                   skip_kinds: tuple = (),
                   host_of: Callable[[str], float | None] = lambda name: None,
+                  stall_of: Callable[[str], float | None] = lambda name: None,
+                  starve_of: Callable[[str], float | None] = lambda name: None,
                   err_noun: str = "firings",
                   err_hint: Callable[[dict], str] = lambda counts: "") \
         -> PipelineReport:
@@ -141,7 +173,8 @@ def _build_report(stg: STG, sel: Selection, *,
         impl = sel.impl_of(stg, name)
         rep.stages[name] = StageMeasurement(
             stage=name, analytic_v=impl.ii / nr, measured_v=measured,
-            replicas=nr, utilization=util_of(name), host_v=host_of(name))
+            replicas=nr, utilization=util_of(name), host_v=host_of(name),
+            stall_v=stall_of(name), starve_v=starve_of(name))
         # normalise to graph iterations for the app-level number
         v_iter = measured * q[name]
         if v_iter > worst_v:
@@ -183,9 +216,19 @@ def compare(stg: STG, sel: Selection, run: PipelineRun,
         return (f" — stream at least {shortfall} more iteration(s) of "
                 f"tokens before measuring")
 
+    def wait_of(name: str, reasons: tuple) -> float | None:
+        # traced runs only: sum the stage's replicas' blocked cycles
+        if not run.wait_cycles:
+            return None
+        workers = run.replica_map.get(name, [name])
+        return sum(run.wait_cycles.get(w, {}).get(r, 0.0)
+                   for w in workers for r in reasons)
+
     return _build_report(
         stg, sel, measured_of=measured_of, firings_of=firings_of,
         util_of=util_of,
+        stall_of=lambda n: wait_of(n, ("credit",)),
+        starve_of=lambda n: wait_of(n, ("starve", "reorder")),
         fifo_stalls=run.channels.total_stalls() if run.channels else 0,
         oversubscription=(run.placement.oversubscription
                           if run.placement else 1.0),
@@ -230,15 +273,30 @@ def compare_lm(stg: STG, sel: Selection, res,
         v = res.stage_host_us(exec_name(name))
         return None if v != v else v
 
-    return _build_report(
+    def wait_of(name: str, reasons: tuple) -> float | None:
+        # traced runs only (`res.stage_wait_s` fills under a Tracer):
+        # seconds the stage's sweep slot sat blocked, by reason
+        waits = getattr(res, "stage_wait_s", None)
+        if not waits:
+            return None
+        d = waits.get(exec_name(name), {})
+        return sum(d.get(r, 0.0) for r in reasons)
+
+    rep = _build_report(
         stg, sel, measured_of=measured_of, firings_of=firings_of,
         util_of=util_of_nr, host_of=host_of,
+        stall_of=lambda n: wait_of(n, ("credit",)),
+        starve_of=lambda n: wait_of(n, ("starve", "reorder")),
         fifo_stalls=sum(s.producer_stalls for s in res.fifo_stats.values()),
         oversubscription=(res.placement.oversubscription
                           if res.placement else 1.0),
         skip_kinds=(SOURCE, SINK),
         err_noun="completions",
         err_hint=lambda _: " — stream more microbatches before measuring")
+    slo_fn = getattr(res, "slo", None)      # serve runs carry client SLOs
+    if callable(slo_fn):
+        rep.slo = slo_fn()
+    return rep
 
 
 def measured_bubble(run) -> float:

@@ -316,6 +316,7 @@ class ScheduleProgram:
         self.wall_scale = wall_scale
         self.free_at = 0.0
         self.stall_mark = -1
+        self.wait_reason = None   # (reason, fifo) of the last deferral
         self._f_done: dict[tuple[int, int], float] = {}   # (chunk, mb)
         self._peers: list[str] = [f"stage{r}"
                                   for r in range(schedule.n_stages)]
@@ -345,27 +346,32 @@ class ScheduleProgram:
             if i > 0:
                 rt = self.acts[i - 1].ready_time(1)
                 if rt is None:
+                    self.wait_reason = ("starve", self.acts[i - 1])
                     return None
                 t = rt
             if i < M - 1 and not self.acts[i].can_push(1):
                 if self.stall_mark != self.pos:
                     self.stall_mark = self.pos
                     self.acts[i].note_stall()
+                self.wait_reason = ("credit", self.acts[i])
                 return None
         else:
             done = self._f_done.get((op.chunk, mb))
             if done is None:
+                self.wait_reason = ("dep", None)
                 return None                    # own forward not retired yet
             t = done
             if i < M - 1:
                 rt = self.grds[i].ready_time(1)
                 if rt is None:
+                    self.wait_reason = ("starve", self.grds[i])
                     return None
                 t = max(t, rt)
             if i > 0 and not self.grds[i - 1].can_push(1):
                 if self.stall_mark != self.pos:
                     self.stall_mark = self.pos
                     self.grds[i - 1].note_stall()
+                self.wait_reason = ("credit", self.grds[i - 1])
                 return None
         return max(t, self.free_at)
 
@@ -474,7 +480,8 @@ class ScheduleRun:
 def simulate_schedule(schedule: Schedule, *,
                       f_cost: float | Callable = 1.0,
                       b_cost: float | Callable | None = None,
-                      capacity_blocks: int = 4) -> ScheduleRun:
+                      capacity_blocks: int = 4,
+                      tracer=None) -> ScheduleRun:
     """Execute ``schedule`` under the virtual-clock driver and measure
     its dynamics — dependency stalls, backpressure, and the realised
     bubble fraction — with per-op costs instead of hardware.  Raises if
@@ -483,7 +490,14 @@ def simulate_schedule(schedule: Schedule, *,
     programs, trace = schedule_programs(
         schedule, f_cost=f_cost, b_cost=b_cost,
         capacity_blocks=capacity_blocks)
-    stats = run_event_loop({p.name: p for p in programs})
+    if tracer is not None:
+        for i in range(len(programs[0].acts)):
+            tracer.watch_fifo(programs[0].acts[i], f"act{i}",
+                              src=f"stage{i}", dst=f"stage{i + 1}")
+        for i in range(len(programs[0].grds)):
+            tracer.watch_fifo(programs[0].grds[i], f"grd{i}",
+                              src=f"stage{i + 1}", dst=f"stage{i}")
+    stats = run_event_loop({p.name: p for p in programs}, tracer=tracer)
     stuck = [p.describe() for p in programs if p.pending()]
     if stuck:
         raise RuntimeError(

@@ -61,9 +61,12 @@ class ServeStats:
     decode_s: float = 0.0
     rounds: int = 0
     compiles: set = field(default_factory=set)
+    slo: dict | None = None        # last pipelined serve's client-side
+    #                                percentiles (`ServeRunResult.slo()`);
+    #                                None on the single-device backend
 
     def summary(self) -> dict:
-        return {
+        out = {
             "requests": self.requests,
             "rounds": self.rounds,
             "prefill_tok_per_s": self.prefill_tokens / self.prefill_s
@@ -72,6 +75,9 @@ class ServeStats:
             if self.decode_s else 0.0,
             "decode_tokens": self.decode_tokens,
         }
+        if self.slo is not None:
+            out["slo"] = dict(self.slo)
+        return out
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -84,7 +90,8 @@ def _bucket(n: int, lo: int = 16) -> int:
 class LMServer:
     def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
                  eos_id: int = 1, params=None, seed: int = 0,
-                 mesh=None, temperature: float = 0.0, pipeline=None):
+                 mesh=None, temperature: float = 0.0, pipeline=None,
+                 tracer=None):
         """``pipeline``: a `runtime.pipeline.DecodePipeline` — when set,
         ``serve``/``serve_round`` stream request groups through it instead
         of the single-device prefill/decode loop.  Build it with the same
@@ -95,6 +102,8 @@ class LMServer:
         self.temperature = temperature
         self.mesh = mesh
         self.pipeline = pipeline
+        self.tracer = tracer         # optional pipeline Tracer (pipelined
+        #                              backend only; None = tracing off)
         self.model = build_model(cfg)
         self.params = params if params is not None \
             else self.model.init(jax.random.PRNGKey(seed))
@@ -195,9 +204,10 @@ class LMServer:
         run = self.pipeline.serve(
             [r.prompt for r in reqs], [r.max_new for r in reqs],
             eos_id=self.eos_id, group_size=self.max_batch,
-            temperature=self.temperature)
+            temperature=self.temperature, tracer=self.tracer)
         self.stats.requests += len(reqs)
         self.stats.rounds += len(run.groups)
+        self.stats.slo = run.slo()
         self.stats.prefill_tokens += run.prefill_tokens
         self.stats.decode_tokens += run.decode_tokens
         # wall windows (they overlap under pipelining): prefill counts

@@ -1,5 +1,13 @@
 """Straggler detection & mitigation hooks.
 
+Two granularities live here:
+
+  * `StragglerMonitor` — pod-scale step-time outliers under synchronous
+    data parallelism (rolling median of step durations per host);
+  * `detect_replica_stragglers` — pipeline-scale replica outliers from
+    the observability layer's per-(stage, replica) retire-latency
+    histograms (`runtime.pipeline.metrics.registry_from_trace`).
+
 Pod-scale rationale: with synchronous data parallelism one slow host sets
 the step time for all N.  The monitor keeps a rolling median of step
 durations (per host when per-host timings are available — multi-host
@@ -76,3 +84,73 @@ class StragglerMonitor:
     @property
     def median(self) -> float:
         return statistics.median(self._history) if self._history else 0.0
+
+
+@dataclass
+class StragglerReport:
+    """One flagged replica."""
+    stage: str
+    replica: int
+    p50_us: float              # this replica's median retire latency
+    peer_p50_us: float         # median of the stage's replica medians
+    samples: int
+
+    @property
+    def ratio(self) -> float:
+        return self.p50_us / self.peer_p50_us if self.peer_p50_us > 0 else 1.0
+
+    def describe(self) -> str:
+        return (f"{self.stage}/r{self.replica}: p50 {self.p50_us:.0f}us vs "
+                f"peer median {self.peer_p50_us:.0f}us "
+                f"(x{self.ratio:.2f}, {self.samples} samples)")
+
+
+def detect_replica_stragglers(registry, *,
+                              threshold: float = 1.5,
+                              min_samples: int = 8) -> list[StragglerReport]:
+    """Flag replicas whose median retire latency exceeds ``threshold`` x
+    the stage's median-of-medians.
+
+    Medians on both sides deliberately: a straggler is a *shifted
+    distribution*, not a tail event — one slow op (a late compile, a GC
+    pause) moves a mean or a p99 but not a median, and the
+    median-of-medians baseline keeps the straggler itself from dragging
+    the reference the way a pooled mean would.  Replicas with fewer than
+    ``min_samples`` observations are skipped (a replica that retired
+    three ops has no distribution to judge).  Stages with a single
+    replica are skipped — there are no peers to lag behind.
+
+    Returns reports sorted worst-first; empty when nothing is flagged.
+    """
+    # (stage, replica) -> Histogram, from the registry's labelled metrics
+    # (lazy import: runtime.pipeline.__init__ re-exports this module)
+    from .pipeline.metrics import Histogram
+    by_stage: dict[str, dict[int, Histogram]] = {}
+    for labels, metric in registry.find("pipeline.retire_latency_us"):
+        ld = dict(labels)
+        try:
+            rep = int(ld.get("replica", -1))
+        except (TypeError, ValueError):
+            continue
+        stage = ld.get("stage")
+        if stage is None or rep < 0 or not isinstance(metric, Histogram):
+            continue
+        by_stage.setdefault(stage, {})[rep] = metric
+
+    out: list[StragglerReport] = []
+    for stage, reps in by_stage.items():
+        eligible = {r: h for r, h in reps.items() if h.count >= min_samples}
+        if len(eligible) < 2:
+            continue
+        medians = {r: h.percentile(50) for r, h in eligible.items()}
+        ranked = sorted(medians.values())
+        peer_p50 = ranked[len(ranked) // 2]
+        if peer_p50 <= 0:
+            continue
+        for r, p50 in medians.items():
+            if p50 > threshold * peer_p50:
+                out.append(StragglerReport(
+                    stage=stage, replica=r, p50_us=p50,
+                    peer_p50_us=peer_p50, samples=eligible[r].count))
+    out.sort(key=lambda s: -s.ratio)
+    return out

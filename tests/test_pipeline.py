@@ -598,24 +598,30 @@ def test_backpressure_bounds_inflight_under_async(lm_setup):
            for _ in range(12)]
 
     def slow_wrap(fwd, dt):
-        def sleepy(y):
-            _time.sleep(dt)
-            return y
-
+        # host-side sleep on the stage's worker thread: a device-side
+        # sleep (pure_callback inside the jit) occupies the single shared
+        # CPU device and serialises *every* stage behind it — producers
+        # then starve instead of backing up and the test races.  Sleeping
+        # on the worker leaves the device free, so upstream stages run
+        # ahead and deterministically fill the slow stage's input FIFO.
         def wrapped(p, x):
-            y = fwd(p, x)
-            return jax.pure_callback(
-                sleepy, jax.ShapeDtypeStruct(y.shape, y.dtype), y)
-        return jax.jit(wrapped)
+            _time.sleep(dt)
+            return fwd(p, x)
+        return wrapped
 
     slow_idx = pipe.n_stages - 2
-    pipe.stages[slow_idx].fwd = slow_wrap(pipe.stages[slow_idx].fwd, 0.03)
+    pipe.stages[slow_idx].fwd = slow_wrap(pipe.stages[slow_idx].fwd, 0.15)
     ref = pipe.reference(mbs)             # same wrapped fns: values unchanged
-    res = pipe.run(mbs)
+    from repro.runtime.pipeline import Tracer
+    tr = Tracer()
+    res = pipe.run(mbs, tracer=tr)
     for a, b in zip(res.outputs, ref):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # the producer feeding the slow stage was actually deferred
+    # the producer feeding the slow stage was actually deferred, and the
+    # backpressure shows up as traced credit-stall wait time upstream
     assert res.fifo_stats[("act", slow_idx - 1)].producer_stalls > 0
+    assert sum(res.stage_wait_s.get(pipe.stages[i].name, {})
+               .get("credit", 0.0) for i in range(slow_idx)) > 0.0
     # bounded in-flight: no edge ever exceeded its slot budget
     # (capacity_blocks=1 + one producer slot + one consumer slot), and at
     # most one op per stage was ever in flight (replica_queue=1, nr=1)

@@ -10,8 +10,11 @@ diffing three metric families:
   * **measured bubble** (``bubble_1f1b``, ``bubble_interleaved``) —
     lower is better; beyond-tolerance regressions warn (``--strict``
     escalates warnings to failures);
-  * **per-stage inverse throughput / host overhead** (``per_stage_us``,
-    ``per_stage_host_us`` dicts) — lower is better; warns like bubble.
+  * **per-stage inverse throughput / host overhead / stall time**
+    (``per_stage_us``, ``per_stage_host_us``, ``per_stage_stall_ms``,
+    ``per_stage_starve_ms`` … dicts) — lower is better; warns like
+    bubble, as do the serving SLO percentiles (``ttft_p95_ms``,
+    ``token_gap_p99_ms``, …) the traced bench_serve replay emits.
 
 Wall-clock rates are host-dependent: a committed baseline is only
 comparable on a similar host, which is why the PR-CI gate REGENERATES
@@ -47,8 +50,20 @@ SOFT_METRICS = {                      # regressions WARN (fail with --strict)
     "bubble_1f1b": "down",
     "bubble_interleaved": "down",
     "v_measured": "down",
+    # serving SLOs from the traced replay (bench_serve) — latency, so
+    # lower is better; warn-only because tail percentiles are noisy on
+    # shared CI hosts
+    "queue_wait_p95_ms": "down",
+    "ttft_p50_ms": "down",
+    "ttft_p95_ms": "down",
+    "ttft_p99_ms": "down",
+    "token_gap_p50_ms": "down",
+    "token_gap_p95_ms": "down",
+    "token_gap_p99_ms": "down",
 }
-DICT_METRICS = ("per_stage_us", "per_stage_host_us")   # down, soft
+DICT_METRICS = ("per_stage_us", "per_stage_host_us",   # down, soft
+                "per_stage_stall_ms", "per_stage_starve_ms",
+                "per_stage_stall_cycles", "per_stage_starve_cycles")
 
 
 def _row_key(row: dict) -> tuple:
@@ -75,6 +90,9 @@ def compare_dirs(baseline_dir: str, new_dir: str, tolerance: float,
     failures, warnings, compared = [], [], []
 
     def check(name, key, metric, direction, base, new, hard):
+        if not isinstance(base, (int, float)) or \
+                not isinstance(new, (int, float)):
+            return                        # e.g. a null SLO/stall field
         reg = _regression(direction, base, new)
         line = (f"{name} {key[0]}/{key[1]} {metric}: "
                 f"{base:.4g} -> {new:.4g} ({-reg:+.1%})")
@@ -83,7 +101,9 @@ def compare_dirs(baseline_dir: str, new_dir: str, tolerance: float,
             (failures if hard or strict else warnings).append(line)
 
     names = sorted(f for f in os.listdir(new_dir)
-                   if f.startswith("BENCH_") and f.endswith(".json"))
+                   if f.startswith("BENCH_") and f.endswith(".json")
+                   and not f.endswith("_trace.json"))   # Chrome traces
+
     for name in names:
         base_path = os.path.join(baseline_dir, name)
         if not os.path.exists(base_path):
