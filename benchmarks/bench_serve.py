@@ -30,8 +30,19 @@ overhead: best-of-N traced decode tokens/s must stay within 3% of
 best-of-N untraced, and the stall bottleneck must land in the analytic
 ranking's top tier.
 
+Chaos drill (``--inject 'decode:r1@tok64=crash'``): serves a deep decode
+window twice through one extra pipeline — fault-free, then with a
+`runtime.failures.ReplicaFaultPlan` killing the named (stage, replica)
+mid-stream — and asserts the failover engine recovered with **bitwise
+token parity** (``tokens_lost == 0``).  The pseudo-stage ``decode``
+resolves to the first multi-replica block stage (forcing a 2-replica
+layout when the plan placed none, so a crash always has survivors).  The
+row (backend ``pipelined-chaos``) reports ``recovery_ms`` and
+``tokens_lost`` for `tools/bench_compare.py` (warn-only).
+
     PYTHONPATH=src python -m benchmarks.bench_serve [--json out.json]
                                                     [--smoke]
+                                                    [--inject SPEC]
 """
 from __future__ import annotations
 
@@ -68,8 +79,66 @@ def _percentiles(samples_s: list[float]) -> tuple[float, float]:
             float(np.percentile(arr, 95)) * 1e3)
 
 
+def _chaos_arm(cfg, stg, plan, reqs, group: int, inject: str,
+               workload: str) -> dict:
+    """Serve a deep decode window fault-free, replay it with the injected
+    replica fault, and prove failover kept token parity."""
+    from repro.runtime.failures import ReplicaFaultPlan
+    from repro.runtime.pipeline import DecodePipeline, as_selection
+
+    stage_alias = inject.split(":r", 1)[0]
+    sel = as_selection(plan)
+    probe = DecodePipeline(cfg, stg, sel, warmup=False)
+    owners = {}                      # stage name -> graph nodes it executes
+    for node, stage in probe.graph_stage_map().items():
+        owners.setdefault(stage, []).append(node)
+    multi = [s for s in probe.stage_names
+             if s.startswith("blocks")
+             and len(probe.stage_devices[probe.stage_names.index(s)]) >= 2]
+    if stage_alias == "decode":      # drill shorthand: any failover-capable
+        target = multi[0] if multi \
+            else next(s for s in probe.stage_names if s.startswith("blocks"))
+    else:
+        target = stage_alias
+    if len(probe.stage_devices[probe.stage_names.index(target)]) < 2:
+        # single-replica target would escalate, not fail over: force two
+        # replicas on every node the stage owns (owners must agree)
+        for node in owners[target]:
+            sel.set(node, sel.choices[node][0], 2)
+    spec = target + inject[len(stage_alias):]
+
+    pipe = DecodePipeline(cfg, stg, sel)
+    prompts = [r.prompt for r in reqs]
+    deep = 48                        # enough decode traffic for tok-triggers
+    pipe.serve(prompts, deep, group_size=group)         # warm
+    ref = pipe.serve(prompts, deep, group_size=group)   # fault-free reference
+    injector = ReplicaFaultPlan.parse(spec)
+    res = pipe.serve(prompts, deep, group_size=group, injector=injector)
+    assert injector.fired > 0, \
+        f"chaos drill vacuous: {spec!r} never fired ({res.decode_tokens} toks)"
+    assert res.failovers or injector.fired, "no failover recorded"
+    tokens_lost = sum(max(0, len(a) - len(b))
+                      for a, b in zip(ref.tokens, res.tokens))
+    assert res.tokens == ref.tokens, \
+        f"failover lost token parity ({tokens_lost} tokens lost)"
+    return {
+        "workload": workload,
+        "backend": "pipelined-chaos",
+        "inject": spec,
+        "fired": injector.fired,
+        "failovers": res.failovers,
+        "recovery_ms": 1e3 * sum(f["recovery_s"] for f in res.failovers),
+        "tokens_lost": tokens_lost,
+        "decode_tok_per_s": res.decode_tokens_per_s(),
+        "decode_tokens": res.decode_tokens,
+        "wall_s": res.wall_s,
+        "note": "fault injected mid-stream; parity asserted against a "
+                "fault-free serve of the same pipeline",
+    }
+
+
 def run(verbose: bool = True, json_path: str | None = None,
-        smoke: bool = False) -> list[dict]:
+        smoke: bool = False, inject: str | None = None) -> list[dict]:
     from repro.configs.base import ShapeCfg
     from repro.configs.tiny import CONFIG as tiny
     from repro.core import planner
@@ -229,12 +298,24 @@ def run(verbose: bool = True, json_path: str | None = None,
     for k, v in rows[-1]["slo"].items():
         rows[-1][k] = v                    # flat copies for bench_compare
 
+    # -- chaos drill --------------------------------------------------------
+    if inject:
+        rows.append(_chaos_arm(tiny, stg, plan, reqs, group, inject,
+                               workload))
+        if verbose:
+            r = rows[-1]
+            print(f"chaos: {r['inject']} fired x{r['fired']}, "
+                  f"recovery {r['recovery_ms']:.1f} ms, "
+                  f"tokens lost {r['tokens_lost']}")
+
     if verbose:
         for r in rows:
-            print(f"{r['workload']:14s} {r['backend']:14s} "
-                  f"decode {r['decode_tok_per_s']:8.1f} tok/s | "
-                  f"token p50 {r['p50_token_ms']:6.1f} ms "
-                  f"p95 {r['p95_token_ms']:6.1f} ms | wall {r['wall_s']:.2f}s")
+            line = (f"{r['workload']:14s} {r['backend']:14s} "
+                    f"decode {r['decode_tok_per_s']:8.1f} tok/s | ")
+            if "p50_token_ms" in r:
+                line += (f"token p50 {r['p50_token_ms']:6.1f} ms "
+                         f"p95 {r['p95_token_ms']:6.1f} ms | ")
+            print(line + f"wall {r['wall_s']:.2f}s")
         if rows[-1].get("stall_bottleneck"):
             print(f"stall bottleneck: {rows[-1]['stall_bottleneck']} | "
                   f"ttft p95 {rows[-1]['ttft_p95_ms']:.1f} ms | "
@@ -249,10 +330,17 @@ def run(verbose: bool = True, json_path: str | None = None,
 
 
 if __name__ == "__main__":
-    path = None
+    path = spec = None
+    usage = "usage: bench_serve [--json PATH] [--smoke] [--inject SPEC]"
     if "--json" in sys.argv:
         i = sys.argv.index("--json") + 1
         if i >= len(sys.argv):
-            sys.exit("usage: bench_serve [--json PATH] [--smoke]")
+            sys.exit(usage)
         path = sys.argv[i]
-    run(verbose=True, json_path=path, smoke="--smoke" in sys.argv)
+    if "--inject" in sys.argv:
+        i = sys.argv.index("--inject") + 1
+        if i >= len(sys.argv):
+            sys.exit(usage)
+        spec = sys.argv[i]
+    run(verbose=True, json_path=path, smoke="--smoke" in sys.argv,
+        inject=spec)

@@ -32,6 +32,16 @@ Layers (see README §runtime/pipeline):
                 builder; `measure.measured_replan` feeds one step back
                 into the solver and `measure.replan_to_fixed_point`
                 iterates the loop to convergence
+  self-healing— `failures.ReplicaFaultPlan` injects deterministic
+                (stage, replica) crashes/stalls into either driver;
+                the engine fails over onto surviving replicas (lost ops
+                replayed under their original sequence numbers, caches
+                rebuilt from token history) or escalates a structured
+                `PipelineFailure`; `health.HealthController` turns
+                straggler detection into live rebalancing and replan
+                advice; `elastic.rescale_serving` + `DecodePipeline`'s
+                pause/resume rescale a serving pool under load without
+                dropping in-flight requests
 """
 
 
@@ -69,7 +79,8 @@ from .schedule import (SchedOp, Schedule, ScheduleProgram, ScheduleRun,
 from .interpreter import PipelineRun, execute, execute_materialized
 from .jax_pipe import (LMPipeline, LMPipelineResult, build_lm_stages,
                        selection_from_plan)
-from .decode import DecodePipeline, ServeRunResult
+from .decode import DecodePipeline, ResumeState, ServeRunResult
+from .health import HealthController
 from .measure import (FixedPointResult, PipelineReport, StageMeasurement,
                       calibrate, compare, compare_lm, measured_bubble,
                       measured_replan, replan_to_fixed_point)
@@ -79,6 +90,8 @@ from .metrics import (BlameEntry, Counter, Gauge, Histogram, MetricsRegistry,
                       attribute_bottleneck, registry_from_trace, serving_slo,
                       stall_bottleneck)
 from ..straggler import StragglerReport, detect_replica_stragglers
+from ..failures import (FailureInjector, PipelineFailure, ReplicaFault,
+                        ReplicaFaultPlan, ReplicaFaultSpec)
 
 __all__ = [
     "as_selection",
@@ -93,7 +106,8 @@ __all__ = [
     "one_f_one_b", "schedule_programs", "simulate_schedule",
     "PipelineRun", "execute", "execute_materialized",
     "LMPipeline", "LMPipelineResult", "build_lm_stages", "selection_from_plan",
-    "DecodePipeline", "ServeRunResult",
+    "DecodePipeline", "ResumeState", "ServeRunResult",
+    "HealthController",
     "FixedPointResult", "PipelineReport", "StageMeasurement", "calibrate",
     "compare", "compare_lm", "measured_bubble", "measured_replan",
     "replan_to_fixed_point",
@@ -103,4 +117,6 @@ __all__ = [
     "attribute_bottleneck", "registry_from_trace", "serving_slo",
     "stall_bottleneck",
     "StragglerReport", "detect_replica_stragglers",
+    "FailureInjector", "PipelineFailure", "ReplicaFault",
+    "ReplicaFaultPlan", "ReplicaFaultSpec",
 ]

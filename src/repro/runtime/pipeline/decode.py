@@ -116,6 +116,11 @@ class _Group:
     t_prefill_done: float = 0.0
     t_last: float = 0.0
     decode_done_s: list = field(default_factory=list)
+    fed: list = field(default_factory=list)
+    # token history: fed[j] is the (B,) token batch fed back for decode
+    # step j.  out_tokens is NOT enough to replay a cache — done slots
+    # keep feeding their last sampled token in lockstep without emitting
+    # it — so failover/rescale cache rebuilds read this instead.
 
     @property
     def batch(self) -> int:
@@ -135,6 +140,8 @@ class ServeRunResult(EngineResult):
     groups: list = field(default_factory=list)   # _Group bookkeeping
     fifo_stats: dict = field(default_factory=dict)
     placement: Placement | None = None
+    paused: bool = False               # admission-paused mid-stream
+    resume_state: object = None        # `ResumeState` when paused
 
     @property
     def decode_tokens(self) -> int:
@@ -211,22 +218,43 @@ class _ServeStageProgram:
         self.stall_mark = -1
         self.wait_reason = None   # (reason, fifo) of the last deferral
         self.caches: dict[int, object] = {}    # gid -> resident cache slice
+        # failover/rebalance state: group routing defaults to the cache-
+        # affinity rule gid % n_replicas; rep_map overrides it after a
+        # replica dies (or a straggler sheds load), dead marks replicas
+        # the engine must never route to again
+        self.rep_map: dict[int, int] = {}
+        self.dead: set[int] = set()
+        self.redo: list = []           # (kind, gid, seq, pos, payload):
+        #                                lost ops re-issued under their
+        #                                ORIGINAL seq so reorder holes fill
+        self.done_count: dict[int, int] = {}   # gid -> retired ops here
+        self.inflight: dict[int, int] = {}     # gid -> dispatched-unretired
 
     def enqueue(self, kind: str, gid: int, seq: int, pos: int) -> None:
         self.queue.append((kind, gid, seq, pos))
 
     def pending(self) -> int:
-        return len(self.queue) - self.pos_i
+        return len(self.queue) - self.pos_i + len(self.redo)
+
+    def rep_of(self, gid: int) -> int:
+        return self.rep_map.get(gid, gid % self.n_replicas)
 
     def peek(self) -> Op | None:
+        if self.redo:
+            kind, gid, seq, _pos, _payload = self.redo[0]
+            return Op(stage=self.s, kind=kind, seq=seq, rep=self.rep_of(gid))
         if self.pos_i >= len(self.queue):
             return None
         kind, gid, seq, _ = self.queue[self.pos_i]
-        return Op(stage=self.s, kind=kind, seq=seq,
-                  rep=gid % self.n_replicas)
+        return Op(stage=self.s, kind=kind, seq=seq, rep=self.rep_of(gid))
 
     def ready(self, op: Op, count_stall: bool = False) -> float | None:
         s, S, run = self.s, self.S, self.run
+        if self.redo:
+            # a replayed op re-runs from its saved inputs and retires into
+            # the slot its original dispatch already reserved — no fifo
+            # state to wait for
+            return 0.0
         if s > 0 and not run.acts[s - 1].can_pop(1):
             self.wait_reason = ("starve", run.acts[s - 1])
             return None
@@ -241,46 +269,67 @@ class _ServeStageProgram:
             return None
         return 0.0
 
+    def _task_for(self, kind: str, gid: int, pos: int, payload, rep: int):
+        """Build the op body from in-hand inputs (``payload`` is the
+        embedded/popped value) — shared by the normal dispatch path and
+        failover replay, so a redo runs the exact math the lost op
+        would have."""
+        s, S, pipe = self.s, self.S, self.pipe
+        g = self.run.groups[gid]
+        dev = pipe.stage_devices[s][rep]
+        params = pipe.stage_params[s][rep]
+        if s == 0:                                        # embed
+            return (_run_stage, (pipe._embed, params, (payload,), dev))
+        if s == S - 1:                                    # head
+            return (_run_stage, (pipe._head, params, (payload,), dev))
+        if kind == "P":
+            return (_run_stage_static_cap,
+                    (pipe._block_prefill, params, payload, g.cap, dev))
+        cache = self.caches[gid]
+        return (_run_stage,
+                (pipe._block_decode, params,
+                 (cache, payload, jnp.asarray(pos, jnp.int32)), dev))
+
     def dispatch(self, op: Op, driver):
-        s, S, run, pipe = self.s, self.S, self.run, self.pipe
+        s, S, run = self.s, self.S, self.run
+        if self.redo:
+            # replay of a lost op: inputs were saved at its original
+            # dispatch; that dispatch's downstream reservation is still
+            # outstanding, so no pop and no reserve here — retirement
+            # fills the reorder hole under the original seq
+            kind, gid, seq, pos, payload = self.redo.pop(0)
+            self.inflight[gid] = self.inflight.get(gid, 0) + 1
+            return self._task_for(kind, gid, pos, payload, op.rep)
         kind, gid, seq, pos = self.queue[self.pos_i]
         self.pos_i += 1
         g = run.groups[gid]
-        dev = pipe.stage_devices[s][op.rep]
-        params = pipe.stage_params[s][op.rep]
         if s == 0:                                        # embed
             if kind == "P":
                 g.t_start = time.perf_counter()
-                x = jnp.asarray(g.tokens)
-                task = (_run_stage, (pipe._embed, params, (x,), dev))
+                payload = jnp.asarray(g.tokens)
             else:
                 seq_got, (gid_got, toks) = run.feedback.pop(1)[0]
                 assert (seq_got, gid_got) == (seq, gid), \
                     f"feedback order broke: {(seq_got, gid_got)}!={(seq, gid)}"
-                task = (_run_stage, (pipe._embed, params, (toks,), dev))
+                payload = toks
         else:
             seq_got, (gid_got, x) = run.acts[s - 1].pop_hold(1)[0]
             assert (seq_got, gid_got) == (seq, gid), \
                 f"fifo order broke: {(seq_got, gid_got)}!={(seq, gid)}"
             op.releases.append((run.acts[s - 1], 1))
-            if s == S - 1:                                # head
-                task = (_run_stage, (pipe._head, params, (x,), dev))
-            elif kind == "P":
-                task = (_run_stage_static_cap,
-                        (pipe._block_prefill, params, x, g.cap, dev))
-            else:
-                cache = self.caches[gid]
-                task = (_run_stage,
-                        (pipe._block_decode, params,
-                         (cache, x, jnp.asarray(pos, jnp.int32)), dev))
+            payload = x
         if s < S - 1:
             run.acts[s].reserve(1)
-        return task
+        op.recover = (kind, gid, seq, pos, payload)
+        self.inflight[gid] = self.inflight.get(gid, 0) + 1
+        return self._task_for(kind, gid, pos, payload, op.rep)
 
     def retire(self, op: Op, result, engine: Engine) -> float:
         s, S, run = self.s, self.S, self.run
         out, t_done = result
         gid = run.gid_of[op.seq]
+        self.done_count[gid] = self.done_count.get(gid, 0) + 1
+        self.inflight[gid] = self.inflight.get(gid, 1) - 1
         if s == S - 1:                                    # head: sample
             run.on_head(op, out, t_done, engine)
         elif s == 0:                                      # embed
@@ -290,6 +339,78 @@ class _ServeStageProgram:
             self.caches[gid] = cache                      # resident here
             engine.ordered_push(run.acts[s], op.seq, (gid, h), t_done)
         return t_done
+
+    # -- failover & rebalance -----------------------------------------------
+    def fail_replica(self, rep: int, driver, lost: list) -> None:
+        """Replica ``rep`` died: remap its groups onto survivors, rebuild
+        the resident cache slices that died with it (deterministic replay
+        from prompt + fed-token history — bitwise what the dead replica
+        held), and queue the drained in-flight ops for redo under their
+        original sequence numbers.  No survivors -> `PipelineFailure`
+        (the engine attaches its diagnostic bundle)."""
+        from ..failures import PipelineFailure
+        self.dead.add(rep)
+        alive = [r for r in range(self.n_replicas) if r not in self.dead]
+        if not alive:
+            raise PipelineFailure(
+                f"stage {self.name}: replica r{rep} was the last one — "
+                f"nothing left to fail over to",
+                stage=self.name, replica=rep)
+        moved = [gid for gid in range(len(self.run.groups))
+                 if self.rep_of(gid) == rep]
+        for i, gid in enumerate(moved):
+            self.rep_map[gid] = alive[i % len(alive)]
+        for op in lost:
+            kind, gid, seq, pos, payload = op.recover
+            self.inflight[gid] = self.inflight.get(gid, 1) - 1
+            self.redo.append((kind, gid, seq, pos, payload))
+        for gid in moved:
+            if gid in self.caches and self.done_count.get(gid, 0) > 0:
+                self.caches[gid] = self.pipe._replay_cache(
+                    self.run, self.run.groups[gid], self.s,
+                    self.done_count[gid], self.rep_map[gid])
+            else:
+                self.caches.pop(gid, None)
+
+    def migrate_gid(self, gid: int, to_rep: int) -> bool:
+        """Move one group to another replica between its ops (straggler
+        shedding): the resident cache slice is *copied* to the new
+        owner's device — the source replica is alive, so no replay is
+        needed — and routing flips.  Refused while the group has an op
+        in flight anywhere at this stage."""
+        if self.inflight.get(gid) or to_rep in self.dead:
+            return False
+        if self.rep_of(gid) == to_rep:
+            return True
+        self.rep_map[gid] = to_rep
+        if gid in self.caches:
+            self.caches[gid] = jax.device_put(
+                self.caches[gid], self.pipe.stage_devices[self.s][to_rep])
+        return True
+
+    def shed_replica(self, rep: int, max_groups: int = 1) -> int:
+        """Shift dispatch share off a slow replica: migrate up to
+        ``max_groups`` of its idle groups to the least-loaded healthy
+        peer.  Returns how many actually moved."""
+        peers = [r for r in range(self.n_replicas)
+                 if r not in self.dead and r != rep]
+        if not peers:
+            return 0
+        n_groups = len(self.run.groups)
+        moved = 0
+        for gid in range(n_groups):
+            if moved >= max_groups:
+                break
+            g = self.run.groups[gid]
+            if self.rep_of(gid) != rep or gid not in self.caches \
+                    or g.done is not None and g.done.all():
+                continue
+            load = {r: sum(1 for g2 in range(n_groups)
+                           if self.rep_of(g2) == r) for r in peers}
+            to = min(peers, key=lambda r: (load[r], r))
+            if self.migrate_gid(gid, to):
+                moved += 1
+        return moved
 
     def describe(self) -> str:
         return describe_position(
@@ -321,11 +442,17 @@ class _ServeRun:
 
     def __init__(self, pipe: "DecodePipeline", groups: list, *,
                  eos_id: int, capacity_blocks: int, overlap: bool,
-                 temperature: float | None = None):
+                 temperature: float | None = None,
+                 pause_at: int | None = None,
+                 open_groups: int | None = None):
         self.pipe = pipe
         self.groups = groups
         self.eos_id = eos_id
         self.temperature = temperature
+        self.pause_at = pause_at       # admission pause: groups reaching
+        self.parked: list[int] = []    # this many decode steps park (their
+        #                                caches stay resident for export)
+        #                                instead of feeding back
         self.gid_of: list[int] = []            # seq -> gid
         self.programs = [_ServeStageProgram(s, pipe, self)
                          for s in range(len(pipe.stage_names))]
@@ -337,7 +464,7 @@ class _ServeRun:
         # consumes it before its next push), so n_groups slots suffice.
         self.feedback = StreamChannel(block=1, capacity_blocks=1,
                                       min_capacity=max(2, len(groups)))
-        self.open_groups = len(groups)
+        self.open_groups = len(groups) if open_groups is None else open_groups
 
     def enqueue(self, kind: str, gid: int, pos: int) -> int:
         seq = len(self.gid_of)
@@ -371,8 +498,18 @@ class _ServeRun:
                     g.done[i] = True
             g.cur = nxt.astype(np.int32)
         if (not g.done.all()) and g.steps < g.budget.max() - 1:
-            seq = self.enqueue("D", g.gid, g.bucket + g.steps)
-            self.feedback.push([(seq, (g.gid, g.cur[:, None]))], t_done)
+            if self.pause_at is not None and g.steps >= self.pause_at:
+                # admission pause: park the group instead of feeding its
+                # token back — caches stay resident for the rescale
+                # export, g.cur is the un-fed token resume() re-feeds
+                self.parked.append(g.gid)
+                self.open_groups -= 1
+                if self.open_groups == 0:
+                    self.feedback.close()
+            else:
+                seq = self.enqueue("D", g.gid, g.bucket + g.steps)
+                g.fed.append(g.cur.copy())
+                self.feedback.push([(seq, (g.gid, g.cur[:, None]))], t_done)
         else:
             g.t_last = t_done - engine.t0
             for p in self.programs:            # free the group's resident
@@ -380,6 +517,28 @@ class _ServeRun:
             self.open_groups -= 1
             if self.open_groups == 0:
                 self.feedback.close()
+
+
+@dataclass
+class ResumeState:
+    """Everything a drained, admission-paused serve hands the next
+    pipeline: the group bookkeeping (prompts, budgets, sampled-token
+    history, the un-fed ``cur`` token) and each block stage's resident
+    cache slices keyed by the stage's period span.  A resuming pipeline
+    whose stage spans match *transfers* the slices (device_put — the
+    cheap path); mismatched spans are rebuilt by deterministic replay
+    from prompt + fed-token history, so a rescale can change the stage
+    partitioning without touching in-flight requests."""
+    groups: list                       # _Group objects, indexed by gid
+    group_of: list                     # request index -> gid
+    eos_id: int
+    stage_caches: dict = field(default_factory=dict)
+    # stage name -> {"span": (lo, hi), "caches": {gid: cache pytree}}
+
+    def live_groups(self) -> list:
+        return [g for g in self.groups
+                if g.done is not None and not g.done.all()
+                and g.steps < g.budget.max() - 1]
 
 
 # ===========================================================================
@@ -437,6 +596,9 @@ class DecodePipeline:
 
         params = params if params is not None \
             else lm.init_params(cfg, jax.random.PRNGKey(seed))
+        self._init_params = params     # full tree (references, not copies):
+        self.periods_per_stage = pps   # what elastic.rescale_serving needs
+        self.seed = seed               # to rebuild this pipeline elsewhere
         head_w = params["embed"].T if cfg.tie_embeddings else params["head"]
 
         # stage list: embed, one per pps-period group, head.  Each block
@@ -620,12 +782,49 @@ class DecodePipeline:
                     out[f"block{li:02d}"] = name
         return out
 
+    def _replay_cache(self, run: "_ServeRun", g: _Group, s_target: int,
+                      k: int, new_rep: int):
+        """Recompute stage ``s_target``'s resident cache slice for group
+        ``g`` as it stood after ``k`` retired ops (prefill + k-1 decode
+        steps), landing it on replica ``new_rep``'s device.
+
+        The replay re-runs the same AOT executables the live traffic uses
+        (embed -> preceding block stages -> target stage) from the
+        prompt and the fed-token history, so on a deterministic platform
+        the rebuilt slice is bitwise the one the dead replica held.
+        Healthy stages are untouched: intermediate stages compute into
+        *temporary* caches (their donated buffers are fresh allocations,
+        never the resident slices), honoring the donation discipline."""
+        gid = g.gid
+
+        def par_dev(s):
+            rep = new_rep if s == s_target else run.programs[s].rep_of(gid)
+            return self.stage_params[s][rep], self.stage_devices[s][rep]
+
+        e_par, e_dev = par_dev(0)
+        h = self._embed(e_par, jax.device_put(jnp.asarray(g.tokens), e_dev))
+        caches = {}
+        for s in range(1, s_target + 1):
+            par, dev = par_dev(s)
+            h, caches[s] = self._block_prefill(
+                par, jax.device_put(h, dev), g.cap)
+        for j in range(k - 1):
+            x = self._embed(e_par, jax.device_put(
+                jnp.asarray(g.fed[j][:, None]), e_dev))
+            pos = jnp.asarray(g.bucket + j, jnp.int32)
+            for s in range(1, s_target + 1):
+                par, dev = par_dev(s)
+                x, caches[s] = self._block_decode(
+                    par, caches[s], jax.device_put(x, dev), pos)
+        return caches[s_target]
+
     # -- serving ------------------------------------------------------------
     def serve(self, prompts: list[list[int]], max_new, *, eos_id: int = 1,
               group_size: int = 8, capacity_blocks: int = 2,
               overlap: bool | None = None,
               temperature: float | None = None,
-              tracer=None) -> ServeRunResult:
+              tracer=None, injector=None, health=None,
+              pause_after_tokens: int | None = None) -> ServeRunResult:
         """Serve ``prompts`` in ``group_size`` slot groups streamed
         concurrently through the pipeline.  Grouping, bucketing, and
         EOS/budget bookkeeping mirror `LMServer.serve_round` on each
@@ -634,7 +833,15 @@ class DecodePipeline:
         the pipeline-level default for this run.  ``tracer``: optional
         `trace.Tracer` — the serve emits op spans, credit/starve waits,
         and fifo occupancy (incl. the head->embed feedback stream);
-        warmup stays untraced."""
+        warmup stays untraced.  ``injector``: optional
+        `failures.ReplicaFaultPlan` chaos schedule (see
+        `fail_replica` for the failover semantics).  ``health``: optional
+        `health.HealthController` ticked from the engine's retire path.
+        ``pause_after_tokens``: admission pause — groups reaching that
+        many decode steps park instead of scheduling further work; the
+        returned result has ``paused=True`` and a ``resume_state`` that
+        `resume()` (on this or a rescaled pipeline) continues without
+        dropping any in-flight request."""
         if not prompts:
             raise ValueError("serve() needs at least one prompt")
         overlap = self.overlap if overlap is None else overlap
@@ -669,7 +876,23 @@ class DecodePipeline:
 
         run = _ServeRun(self, groups, eos_id=eos_id,
                         capacity_blocks=capacity_blocks, overlap=overlap,
-                        temperature=temperature)
+                        temperature=temperature,
+                        pause_at=pause_after_tokens)
+        for g in groups:
+            run.enqueue("P", g.gid, 0)
+        res, engine = self._launch(run, group_of, overlap=overlap,
+                                   tracer=tracer, injector=injector,
+                                   health=health)
+        for g in groups:                       # run-relative group timings
+            g.t_start = max(0.0, g.t_start - engine.t0)
+        return res
+
+    def _launch(self, run: "_ServeRun", group_of: list, *, overlap: bool,
+                tracer, injector, health) -> tuple[ServeRunResult, Engine]:
+        """Wire channels, drive the engine to quiescence, fold the
+        engine result into a `ServeRunResult` (exporting a `ResumeState`
+        when the run admission-paused) — shared by `serve` and
+        `resume`."""
         names = self.stage_names
         fifo_map = {f"act{s}": run.acts[s] for s in range(len(run.acts))}
         fifo_map["feedback"] = run.feedback
@@ -679,33 +902,96 @@ class DecodePipeline:
                                   src=names[s], dst=names[s + 1])
             tracer.watch_fifo(run.feedback, "feedback",
                               src=names[-1], dst=names[0])
-        for g in groups:
-            run.enqueue("P", g.gid, 0)
         engine = Engine(run.programs, overlap=overlap,
                         workers=self._n_workers(),
                         replica_queue=self.replica_queue,
-                        tracer=tracer, fifos=fifo_map)
+                        tracer=tracer, fifos=fifo_map, injector=injector,
+                        on_tick=None if health is None else health.tick,
+                        tick_every=64 if health is None
+                        else health.check_every)
         with self.compile_stats.window():
             er = engine.run()
         assert run.feedback.exhausted, \
             "token stream not drained: a group retired with tokens in flight"
-        for g in groups:                       # run-relative group timings
-            g.t_start = max(0.0, g.t_start - engine.t0)
 
         res = ServeRunResult(
-            tokens=[], group_of=group_of, groups=groups,
+            tokens=[], group_of=group_of, groups=run.groups,
             stage_done_s=er.stage_done_s, stage_seconds=er.stage_seconds,
             stage_firings=er.stage_firings,
             stage_dispatch_s=er.stage_dispatch_s, op_trace=er.op_trace,
             max_inflight=er.max_inflight, wall_s=er.wall_s,
-            stage_wait_s=er.stage_wait_s,
+            stage_wait_s=er.stage_wait_s, failovers=er.failovers,
             placement=self.placement)
         idx_in_group: dict[int, int] = {}
         for gid in group_of:
             i = idx_in_group.get(gid, 0)
             idx_in_group[gid] = i + 1
-            res.tokens.append(groups[gid].out_tokens[i])
+            res.tokens.append(run.groups[gid].out_tokens[i])
         for s in range(len(run.acts)):
             res.fifo_stats[("act", s)] = run.acts[s].stats
         res.fifo_stats["feedback"] = run.feedback.stats
+        if run.parked:
+            S = len(names)
+            res.paused = True
+            res.resume_state = ResumeState(
+                groups=run.groups, group_of=list(group_of),
+                eos_id=run.eos_id,
+                stage_caches={
+                    names[s]: {"span": self.period_span[s],
+                               "caches": dict(run.programs[s].caches)}
+                    for s in range(1, S - 1)})
+        return res, engine
+
+    def resume(self, state: ResumeState, *, capacity_blocks: int = 2,
+               overlap: bool | None = None,
+               temperature: float | None = None, tracer=None,
+               injector=None, health=None,
+               pause_after_tokens: int | None = None) -> ServeRunResult:
+        """Continue an admission-paused serve on THIS pipeline — possibly
+        a different plan, partitioning, or device pool than the one that
+        drained (`elastic.rescale_serving` builds that pipeline).  Live
+        groups' cache slices are adopted: *transferred* (device_put)
+        when this pipeline's stage spans match the exporter's, rebuilt
+        by deterministic replay from prompt + fed-token history when
+        they don't.  Each group's parked token is fed back and decoding
+        continues, so no in-flight request is dropped and the combined
+        streams are bitwise what an uninterrupted serve yields."""
+        overlap = self.overlap if overlap is None else overlap
+        live = state.live_groups()
+        if not live:
+            raise ValueError("resume() on a state with no live groups")
+        if self.warmup:
+            for g in live:
+                self._warm_group_shape(g.batch, g.bucket, g.cap)
+        run = _ServeRun(self, state.groups, eos_id=state.eos_id,
+                        capacity_blocks=capacity_blocks, overlap=overlap,
+                        temperature=temperature,
+                        pause_at=pause_after_tokens,
+                        open_groups=len(live))
+        S = len(self.stage_names)
+        by_span = {tuple(v["span"]): v["caches"]
+                   for v in state.stage_caches.values()}
+        for s in range(S):
+            prog = run.programs[s]
+            span = self.period_span[s]
+            donors = by_span.get(tuple(span)) if span is not None else None
+            for g in live:
+                k = 1 + g.steps        # every stage retired prefill +
+                prog.done_count[g.gid] = k     # g.steps decode ops
+                if span is None:
+                    continue
+                if donors is not None and g.gid in donors:
+                    prog.caches[g.gid] = jax.device_put(
+                        donors[g.gid],
+                        self.stage_devices[s][prog.rep_of(g.gid)])
+                else:
+                    prog.caches[g.gid] = self._replay_cache(
+                        run, g, s, k, prog.rep_of(g.gid))
+        for g in live:
+            seq = run.enqueue("D", g.gid, g.bucket + g.steps)
+            g.fed.append(g.cur.copy())
+            run.feedback.push([(seq, (g.gid, g.cur[:, None]))], 0.0)
+        res, _engine = self._launch(run, state.group_of, overlap=overlap,
+                                    tracer=tracer, injector=injector,
+                                    health=health)
         return res

@@ -52,6 +52,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Protocol, runtime_checkable
 
+from ..failures import PipelineFailure, ReplicaFault
 from .channels import Fifo
 
 
@@ -93,6 +94,11 @@ class Op:
     releases: list = field(default_factory=list)       # (Fifo, n)
     is_firing: bool = True       # contributes to the stage's completion
     #                              stream (jax path: F ops only)
+    recover: tuple | None = None  # program-defined replay payload: what
+    #                               `fail_replica` needs to re-issue this
+    #                               op on a surviving replica (inputs were
+    #                               consumed at dispatch; a lost op cannot
+    #                               re-pop them)
 
 
 @runtime_checkable
@@ -197,6 +203,14 @@ class Driver:
     def note_busy(self, name: str, amount: float) -> None:
         pass
 
+    def reorder_occupancy(self) -> int:
+        """Tokens parked in reorder buffers across every edge — 0 at
+        quiescence.  A permanently missing seq (a dead replica whose op
+        was never replayed) shows up here as a stuck nonzero count, which
+        is why failover re-issues lost ops under their *original*
+        sequence numbers."""
+        return sum(len(pend) for pend, _ in self._reorder.values())
+
     def wait_reason_of(self, prog) -> tuple[str, str]:
         """Classify why ``prog`` just deferred: programs leave a
         ``wait_reason = (reason, fifo)`` breadcrumb when ``ready``
@@ -241,6 +255,10 @@ class EngineResult:
     # (input empty) vs reorder attribution; populated only when the run
     # was traced (the accounting rides the tracer's enable flag so the
     # default path stays untouched)
+    failovers: list = field(default_factory=list)
+    # one dict per survived replica fault: {stage, replica, kind,
+    # t_fault_s, recovery_s, replayed_ops} — the drill's recovery-time
+    # and tokens-lost evidence
 
     def stage_inverse_us(self, name: str) -> float:
         """Steady-state microseconds per firing of one stage (merged
@@ -264,6 +282,15 @@ class EngineResult:
                 if n else float("nan"))
 
 
+def _stalled(fn: Callable, stall_s: float) -> Callable:
+    """Wrap an op body in a host-side sleep — the injected-straggler
+    shape: the replica is alive but every firing it runs is slow."""
+    def wrapped(*args):
+        time.sleep(stall_s)
+        return fn(*args)
+    return wrapped
+
+
 class Engine(Driver):
     """Wall-clock driver: non-blocking scheduler over a list of `Program`s.
 
@@ -279,19 +306,33 @@ class Engine(Driver):
 
     def __init__(self, programs: list, *, overlap: bool = True,
                  workers: int = 8, replica_queue: int = 2,
-                 tracer=None, fifos: dict | None = None):
+                 tracer=None, fifos: dict | None = None,
+                 injector=None, on_tick: Callable | None = None,
+                 tick_every: int = 64):
         """``tracer``: optional `trace.Tracer` — op spans, wait spans, and
         per-stage stall/starve accounting (off = zero-cost path).
         ``fifos``: {label: Fifo} for the deadlock report's occupancy
-        snapshot (independent of tracing)."""
+        snapshot (independent of tracing).  ``injector``: optional
+        `failures.ReplicaFaultPlan` consulted before every dispatch —
+        a firing ``crash`` marks the op's replica dead and triggers
+        failover, a ``stall`` wraps the op body in a host-side sleep.
+        ``on_tick(engine)``: optional health hook invoked every
+        ``tick_every`` retirements from the scheduler thread (the
+        `HealthController` attachment point)."""
         super().__init__(tracer)
         self.programs = list(programs)
         self.fifos = dict(fifos or {})
         self.overlap = overlap
         self.workers = max(1, workers)
         self.replica_queue = max(1, replica_queue)
+        self.injector = injector
+        self.on_tick = on_tick
+        self.tick_every = max(1, tick_every)
+        self._retired_n = 0
         self.result = EngineResult()
         self._busy = [[0] * max(1, p.n_replicas) for p in self.programs]
+        self._inflight: dict = {}     # future -> Op (worker running)
+        self._pending: list = []      # (Op, AsyncResult): device in flight
         for p in self.programs:
             self.result.stage_seconds[p.name] = 0.0
             self.result.stage_firings[p.name] = 0
@@ -315,6 +356,10 @@ class Engine(Driver):
             self.tracer.op_retire(prog.name, op.rep, op.kind, op.seq,
                                   op.chunk, op.t_dispatch - self.t0,
                                   t_done - self.t0)
+        self._retired_n += 1
+        if self.on_tick is not None \
+                and self._retired_n % self.tick_every == 0:
+            self.on_tick(self)
 
     def _settle(self, op: Op, result, t_done: float) -> None:
         """Retire a completed op, unwrapping an `AsyncResult` by appending
@@ -330,6 +375,79 @@ class Engine(Driver):
         for fifo, n in op.releases:
             fifo.release(n)
         self._busy[op.stage][op.rep] -= 1
+
+    def diagnostic_bundle(self) -> dict:
+        """The deadlock report's forensics as structured data — what a
+        `PipelineFailure` carries out of the run: every registered
+        fifo's occupancy, each stuck program's wait reason and schedule
+        position, reorder-buffer depth, failover history, trace tail."""
+        bundle: dict = {
+            "fifo_occupancy": {
+                label: {"len": len(f), "capacity": f.capacity,
+                        "inflight_slots": f.inflight_slots}
+                for label, f in sorted(self.fifos.items())},
+            "waiting": {p.name: self.wait_reason_of(p)
+                        for p in self.programs if p.pending()},
+            "schedule": [p.describe() for p in self.programs],
+            "reorder_occupancy": self.reorder_occupancy(),
+            "failovers": list(self.result.failovers),
+        }
+        if self.tracer is not None:
+            bundle["trace_tail"] = [
+                f"{e.track}:{e.kind} {e.name}{e.seq if e.seq >= 0 else ''}"
+                f"@{e.t:.4g}" for e in self.tracer.tail(n=12)]
+        return bundle
+
+    def _replica_fault(self, s: int, rep: int, kind: str, lost0=()) -> None:
+        """Whole-replica abort + failover: replica ``rep`` of stage ``s``
+        died.  Drain its in-flight ops (results discarded — the device is
+        gone), release every credit they held, and hand the lost ops —
+        sorted by seq, each carrying its ``recover`` payload — to the
+        program's ``fail_replica`` hook, which remaps routing and queues
+        the replay.  A program without the hook, or whose last replica
+        died, escalates to `PipelineFailure` with the diagnostic bundle
+        attached — a structured failure, never a wedged reorder buffer."""
+        prog = self.programs[s]
+        t_fault = time.perf_counter() - self.t0
+        lost = list(lost0)
+        for f in [f for f, o in self._inflight.items()
+                  if o.stage == s and o.rep == rep]:
+            op = self._inflight.pop(f)
+            try:
+                f.result()          # wait the body home; discard its output
+            except BaseException:
+                pass
+            self._abort(op)
+            lost.append(op)
+        for op, ar in [(o, a) for o, a in self._pending
+                       if o.stage == s and o.rep == rep]:
+            self._pending.remove((op, ar))
+            self._abort(op)
+            lost.append(op)
+        lost.sort(key=lambda o: o.seq)
+        fail = getattr(prog, "fail_replica", None)
+        try:
+            if fail is None:
+                raise PipelineFailure(
+                    f"stage {prog.name}: replica r{rep} died ({kind}) and "
+                    f"the program has no failover hook",
+                    stage=prog.name, replica=rep, reason=kind)
+            fail(rep, self, lost)
+        except PipelineFailure as e:
+            e.reason = e.reason or kind
+            for key, val in self.diagnostic_bundle().items():
+                e.diagnostics.setdefault(key, val)
+            e.diagnostics.setdefault(
+                "lost_ops", [(o.kind, o.seq) for o in lost])
+            raise
+        t_rec = time.perf_counter() - self.t0
+        self.result.failovers.append({
+            "stage": prog.name, "replica": rep, "kind": kind,
+            "t_fault_s": t_fault, "recovery_s": t_rec - t_fault,
+            "replayed_ops": len(lost)})
+        if self.tracer is not None:
+            self.tracer.failover(prog.name, rep, kind, t_fault, t_rec,
+                                 len(lost))
 
     def _deadlock_detail(self) -> str:
         """Hang forensics appended to the deadlock error: what each party
@@ -376,8 +494,8 @@ class Engine(Driver):
         from concurrent.futures import (FIRST_COMPLETED, ThreadPoolExecutor,
                                         wait)
         self.t0 = time.perf_counter()
-        inflight: dict = {}                 # future -> Op (worker running)
-        pending: list = []                  # (Op, AsyncResult): body returned,
+        inflight = self._inflight           # future -> Op (worker running)
+        pending = self._pending             # (Op, AsyncResult): body returned,
         #                                     device work still in flight
         pool = ThreadPoolExecutor(max_workers=self.workers) \
             if self.overlap else None
@@ -406,7 +524,21 @@ class Engine(Driver):
                             wait_since[s] = (time.perf_counter() - self.t0,
                                              self.wait_reason_of(prog))
                         continue
+                    stall_s = 0.0
+                    if self.injector is not None:
+                        spec = self.injector.check(prog.name, op.rep, op.seq)
+                        if spec is not None and spec.kind == "crash":
+                            # the op consumed nothing yet: failover remaps
+                            # its routing and the next sweep re-peeks it
+                            # onto a surviving replica
+                            self._replica_fault(s, op.rep, spec.kind)
+                            progressed = True
+                            continue
+                        elif spec is not None:
+                            stall_s = spec.stall_s
                     fn, args = prog.dispatch(op, self)
+                    if stall_s > 0.0:
+                        fn = _stalled(fn, stall_s)
                     op.t_dispatch = time.perf_counter()
                     self._busy[s][op.rep] += 1
                     progressed = True
@@ -425,6 +557,12 @@ class Engine(Driver):
                         # serial A/B baseline: dispatch, await, advance
                         try:
                             result, host_s = self._timed(fn, args)
+                        except ReplicaFault:
+                            self._abort(op)     # the op itself is lost too:
+                            self._replica_fault(s, op.rep, "crash",
+                                                lost0=(op,))
+                            progressed = True
+                            continue
                         except BaseException:
                             self._abort(op)
                             raise
@@ -432,6 +570,12 @@ class Engine(Driver):
                         if isinstance(result, AsyncResult):
                             try:        # a device error surfaces here —
                                 result.block()   # free credits like the
+                            except ReplicaFault:
+                                self._abort(op)
+                                self._replica_fault(s, op.rep, "crash",
+                                                    lost0=(op,))
+                                progressed = True
+                                continue
                             except BaseException:  # old in-body sync did
                                 self._abort(op)
                                 raise
@@ -448,6 +592,12 @@ class Engine(Driver):
                     op = inflight.pop(f)
                     try:
                         result, host_s = f.result()
+                    except ReplicaFault:
+                        self._abort(op)
+                        self._replica_fault(op.stage, op.rep, "crash",
+                                            lost0=(op,))
+                        progressed = True
+                        continue
                     except BaseException:
                         self._abort(op)
                         raise
@@ -468,7 +618,7 @@ class Engine(Driver):
                             progressed = True
                         else:
                             still.append((op, ar))
-                    pending = still
+                    pending = self._pending = still
                 if not progressed:
                     if inflight:
                         # with device work pending, wait bounded (a watch
@@ -485,6 +635,11 @@ class Engine(Driver):
                         op, ar = pending.pop(0)
                         try:
                             ar.block()
+                        except ReplicaFault:
+                            self._abort(op)
+                            self._replica_fault(op.stage, op.rep, "crash",
+                                                lost0=(op,))
+                            continue
                         except BaseException:
                             self._abort(op)
                             raise
@@ -518,6 +673,12 @@ class EventLoopStats:
     wait_cycles: dict[str, dict[str, float]] = field(default_factory=dict)
     # stage -> {reason: cycles blocked} — the virtual-clock twin of
     # `EngineResult.stage_wait_s`; populated only under a tracer
+    failovers: list = field(default_factory=list)
+    # survived replica faults, as in `EngineResult.failovers` (virtual
+    # clock: recovery is instantaneous and nothing is in flight, so the
+    # entries carry t_fault_cycles and replayed_ops only)
+    skipped_faults: list = field(default_factory=list)
+    # stall specs the virtual clock cannot honor (no host time to burn)
 
 
 class EventLoop(Driver):
@@ -534,9 +695,17 @@ class EventLoop(Driver):
 
     virtual = True
 
-    def __init__(self, programs: dict[str, Program], tracer=None):
+    def __init__(self, programs: dict[str, Program], tracer=None,
+                 injector=None):
+        """``injector``: optional `failures.ReplicaFaultPlan` — same
+        dispatch-time consultation as the wall-clock engine, so a chaos
+        drill fires at the identical op coordinate on the simulator.
+        Crash faults fail over synchronously (the virtual clock has no
+        in-flight ops to drain); stall faults are recorded in
+        ``stats.skipped_faults`` — there is no host time to burn."""
         super().__init__(tracer)
         self.programs = dict(programs)
+        self.injector = injector
         self.now = 0.0
         self._wake: set[str] = set()
 
@@ -545,6 +714,34 @@ class EventLoop(Driver):
 
     def note_busy(self, name: str, amount: float) -> None:
         self.stats.busy_cycles[name] += amount
+
+    def _replica_fault(self, name: str, rep: int, kind: str) -> None:
+        """Virtual-clock failover: nothing is ever in flight (dispatch
+        and retire are one synchronous step), so a fault only remaps
+        routing — the about-to-fire op re-peeks onto a survivor."""
+        prog = self.programs[name]
+        fail = getattr(prog, "fail_replica", None)
+        try:
+            if fail is None:
+                raise PipelineFailure(
+                    f"stage {name}: replica r{rep} died ({kind}) and "
+                    f"the program has no failover hook",
+                    stage=name, replica=rep, reason=kind)
+            fail(rep, self, [])
+        except PipelineFailure as e:
+            e.reason = e.reason or kind
+            e.diagnostics.setdefault(
+                "schedule", [p.describe() for p in self.programs.values()])
+            e.diagnostics.setdefault("reorder_occupancy",
+                                     self.reorder_occupancy())
+            e.diagnostics.setdefault("failovers",
+                                     list(self.stats.failovers))
+            raise
+        self.stats.failovers.append({
+            "stage": name, "replica": rep, "kind": kind,
+            "t_fault_cycles": self.now, "replayed_ops": 0})
+        if self.tracer is not None:
+            self.tracer.failover(name, rep, kind, self.now, self.now, 0)
 
     def run(self, *, max_firings: int = 1_000_000,
             max_cycles: float = 1e12) -> EventLoopStats:
@@ -604,6 +801,16 @@ class EventLoop(Driver):
                 continue
             self.now = now
             self._wake = set()
+            if self.injector is not None:
+                spec = self.injector.check(name, op.rep, op.seq)
+                if spec is not None and spec.kind == "crash":
+                    self._replica_fault(name, op.rep, spec.kind)
+                    for c in self._wake | {name}:
+                        if c in programs:
+                            push_candidate(c)
+                    continue
+                elif spec is not None:
+                    stats.skipped_faults.append((name, op.rep, spec.kind))
             fn, args = prog.dispatch(op, self)
             op.t_dispatch = now
             if tr is not None:
@@ -634,8 +841,8 @@ class EventLoop(Driver):
 def run_event_loop(programs: dict[str, Program], *,
                    max_firings: int = 1_000_000,
                    max_cycles: float = 1e12,
-                   tracer=None) -> EventLoopStats:
+                   tracer=None, injector=None) -> EventLoopStats:
     """Drive `Program`s to quiescence under a virtual clock (the
     functional entry point over `EventLoop`)."""
-    return EventLoop(programs, tracer).run(max_firings=max_firings,
-                                           max_cycles=max_cycles)
+    return EventLoop(programs, tracer, injector).run(max_firings=max_firings,
+                                                     max_cycles=max_cycles)

@@ -752,7 +752,7 @@ class LMPipeline:
     def run(self, microbatches: list, *, train: bool = False,
             loss_fn=None, overlap: bool | None = None,
             schedule: Schedule | None = None,
-            tracer=None) -> LMPipelineResult:
+            tracer=None, injector=None) -> LMPipelineResult:
         """Stream microbatches through the pipeline under ``schedule``.
 
         Serving (train=False) defaults to `schedule.fill_drain` streaming
@@ -814,7 +814,7 @@ class LMPipeline:
         engine = Engine(programs, overlap=overlap,
                         workers=self._n_workers(),
                         replica_queue=self.replica_queue,
-                        tracer=tracer, fifos=fifo_map)
+                        tracer=tracer, fifos=fifo_map, injector=injector)
         with self.compile_stats.window():
             er = engine.run()
         res.stage_wait_s = er.stage_wait_s

@@ -159,6 +159,13 @@ def registry_from_trace(tracer: Tracer,
                           stage=stage, replica=str(rep))
         for dt in samples:
             h.observe(dt * 1e6)
+    for (stage, rep, t_fault, t_rec, n_replayed) in tracer.failovers:
+        reg.counter("pipeline.failovers", stage=stage,
+                    replica=str(rep)).inc()
+        reg.counter("pipeline.replayed_ops", stage=stage,
+                    replica=str(rep)).inc(n_replayed)
+        reg.histogram("pipeline.recovery_s", stage=stage).observe(
+            t_rec - t_fault)
     if wall_s and wall_s > 0:
         n_reps: dict[str, int] = {}
         for track in tracer.busy:

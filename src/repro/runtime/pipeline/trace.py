@@ -52,6 +52,9 @@ EV_RETIRE = "retire"         # op complete; t0 carries the dispatch time
 EV_WAIT = "wait"             # a stage's blocked span closed (name = reason)
 EV_PUSH = "push"             # fifo gained tokens; value = occupancy after
 EV_POP = "pop"               # fifo lost tokens; value = occupancy after
+EV_FAILOVER = "failover"     # a replica died and its work moved; t0 is
+#                              the fault time, t the recovery-complete
+#                              time, value the number of replayed ops
 
 # wait reasons (the bottleneck-vs-excess-capacity signal) -------------------
 WAIT_CREDIT = "credit"       # output fifo full: the DOWNSTREAM side is slow
@@ -111,6 +114,7 @@ class Tracer:
         self.retire_samples: dict[tuple, list] = {}    # (stage, rep) -> [dt]
         self.n_dispatch: dict[str, int] = {}           # track -> count
         self.n_retire: dict[str, int] = {}
+        self.failovers: list[tuple] = []   # (stage, rep, t_fault, t_rec, n)
         self.fifo_watch: dict[str, FifoWatch] = {}     # label -> watch entry
         self.virtual = False
 
@@ -157,6 +161,17 @@ class Tracer:
     def fifo_event(self, kind: str, label: str, occupancy: int) -> None:
         self.events.append(TraceEvent(kind, label, self.now(),
                                       value=occupancy))
+
+    def failover(self, stage: str, rep: int, kind: str, t_fault: float,
+                 t_recovered: float, n_replayed: int) -> None:
+        """One replica died and its work was adopted by survivors: span
+        from fault detection to routing/caches/replay-queue restored
+        (the replayed ops themselves complete later, on the engine's
+        normal clock)."""
+        self.events.append(TraceEvent(EV_FAILOVER, f"{stage}/r{rep}",
+                                      t_recovered, kind, seq=n_replayed,
+                                      t0=t_fault))
+        self.failovers.append((stage, rep, t_fault, t_recovered, n_replayed))
 
     # -- fifo registration ---------------------------------------------------
     def watch_fifo(self, fifo, label: str, *, src: str | None = None,
@@ -256,6 +271,12 @@ class Tracer:
                     "name": f"fifo {ev.track}", "ph": "C", "pid": 0,
                     "ts": ev.t * scale,
                     "args": {"occupancy": ev.value}})
+            elif ev.kind == EV_FAILOVER:
+                events.append({
+                    "name": f"failover ({ev.name})", "ph": "X", "pid": 0,
+                    "tid": tid(ev.track), "ts": ev.t0 * scale,
+                    "dur": max(0.0, (ev.t - ev.t0)) * scale,
+                    "args": {"replayed_ops": ev.seq}})
         return {"traceEvents": events, "displayTimeUnit": "ms"}
 
     def save(self, path: str) -> str:

@@ -91,11 +91,14 @@ class LMServer:
     def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
                  eos_id: int = 1, params=None, seed: int = 0,
                  mesh=None, temperature: float = 0.0, pipeline=None,
-                 tracer=None):
+                 tracer=None, injector=None, health=None):
         """``pipeline``: a `runtime.pipeline.DecodePipeline` — when set,
         ``serve``/``serve_round`` stream request groups through it instead
         of the single-device prefill/decode loop.  Build it with the same
-        ``seed`` (or pass the server's ``params``) for token parity."""
+        ``seed`` (or pass the server's ``params``) for token parity.
+        ``injector`` (a `failures.ReplicaFaultPlan`) and ``health`` (a
+        `pipeline.health.HealthController`) ride along on every pipelined
+        serve — chaos drills and self-healing, pipelined backend only."""
         self.cfg = cfg
         self.max_batch = max_batch
         self.eos_id = eos_id
@@ -104,6 +107,8 @@ class LMServer:
         self.pipeline = pipeline
         self.tracer = tracer         # optional pipeline Tracer (pipelined
         #                              backend only; None = tracing off)
+        self.injector = injector     # optional ReplicaFaultPlan (chaos)
+        self.health = health         # optional HealthController
         self.model = build_model(cfg)
         self.params = params if params is not None \
             else self.model.init(jax.random.PRNGKey(seed))
@@ -204,7 +209,8 @@ class LMServer:
         run = self.pipeline.serve(
             [r.prompt for r in reqs], [r.max_new for r in reqs],
             eos_id=self.eos_id, group_size=self.max_batch,
-            temperature=self.temperature, tracer=self.tracer)
+            temperature=self.temperature, tracer=self.tracer,
+            injector=self.injector, health=self.health)
         self.stats.requests += len(reqs)
         self.stats.rounds += len(run.groups)
         self.stats.slo = run.slo()

@@ -43,6 +43,7 @@ class StragglerMonitor:
     threshold: float = 2.5
     warmup_steps: int = 3          # compile/first-touch steps are not stragglers
     on_straggler: Callable[[StragglerEvent], None] | None = None
+    registry: object | None = None  # optional MetricsRegistry: counts firings
     _history: list[float] = field(default_factory=list)
     events: list[StragglerEvent] = field(default_factory=list)
     observed: int = 0
@@ -53,21 +54,25 @@ class StragglerMonitor:
         per_host = duration if isinstance(duration, dict) else {0: duration}
         self.observed += 1
         flagged: list[StragglerEvent] = []
+        # one median per observe: flagging and the healthy-filter below must
+        # judge against the same pre-update baseline
+        med = statistics.median(self._history) if self._history else 0.0
         if self._history and self.observed > self.warmup_steps:
-            med = statistics.median(self._history)
             for host, dur in per_host.items():
                 if dur > self.threshold * med:
                     ev = StragglerEvent(step=step, host=host, duration=dur,
                                         median=med)
                     flagged.append(ev)
                     self.events.append(ev)
+                    if self.registry is not None:
+                        self.registry.counter("straggler.flagged",
+                                              host=str(host)).inc()
                     if self.on_straggler is not None:
                         self.on_straggler(ev)
         if self.observed > self.warmup_steps:
             # the median tracks healthy steps; don't let stragglers poison it
             healthy = [d for d in per_host.values()
-                       if not self._history
-                       or d <= self.threshold * statistics.median(self._history)]
+                       if not self._history or d <= self.threshold * med]
             self._history.extend(healthy or per_host.values())
         else:
             self._history.extend(per_host.values())
@@ -92,7 +97,7 @@ class StragglerReport:
     stage: str
     replica: int
     p50_us: float              # this replica's median retire latency
-    peer_p50_us: float         # median of the stage's replica medians
+    peer_p50_us: float         # median of the OTHER replicas' medians
     samples: int
 
     @property
@@ -109,16 +114,19 @@ def detect_replica_stragglers(registry, *,
                               threshold: float = 1.5,
                               min_samples: int = 8) -> list[StragglerReport]:
     """Flag replicas whose median retire latency exceeds ``threshold`` x
-    the stage's median-of-medians.
+    the median of its *peers'* medians (leave-self-out).
 
     Medians on both sides deliberately: a straggler is a *shifted
     distribution*, not a tail event — one slow op (a late compile, a GC
     pause) moves a mean or a p99 but not a median, and the
     median-of-medians baseline keeps the straggler itself from dragging
-    the reference the way a pooled mean would.  Replicas with fewer than
-    ``min_samples`` observations are skipped (a replica that retired
-    three ops has no distribution to judge).  Stages with a single
-    replica are skipped — there are no peers to lag behind.
+    the reference the way a pooled mean would.  The baseline excludes
+    the replica under judgement: with exactly two replicas an inclusive
+    median-of-medians IS the slower replica's own median, which made a
+    2-replica stage's straggler structurally undetectable.  Replicas
+    with fewer than ``min_samples`` observations are skipped (a replica
+    that retired three ops has no distribution to judge).  Stages with a
+    single replica are skipped — there are no peers to lag behind.
 
     Returns reports sorted worst-first; empty when nothing is flagged.
     """
@@ -143,11 +151,11 @@ def detect_replica_stragglers(registry, *,
         if len(eligible) < 2:
             continue
         medians = {r: h.percentile(50) for r, h in eligible.items()}
-        ranked = sorted(medians.values())
-        peer_p50 = ranked[len(ranked) // 2]
-        if peer_p50 <= 0:
-            continue
         for r, p50 in medians.items():
+            peers = sorted(v for k, v in medians.items() if k != r)
+            peer_p50 = peers[len(peers) // 2]
+            if peer_p50 <= 0:
+                continue
             if p50 > threshold * peer_p50:
                 out.append(StragglerReport(
                     stage=stage, replica=r, p50_us=p50,
