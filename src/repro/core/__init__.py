@@ -1,4 +1,7 @@
 """Core of the paper's contribution: automated space/time scaling of STGs."""
-from . import fork_join, heuristic, ilp, intra_node, simulate, throughput, transform  # noqa: F401
+from . import fork_join, heuristic, ilp, intra_node, restructure, simulate, throughput, transform  # noqa: F401
 from .fork_join import JPEG_CALIBRATED, LITERAL, ForkJoinModel  # noqa: F401
+from .restructure import (FusionScore, RestructuredGraph, auto_fusion,  # noqa: F401
+                          combine, enumerate_fusions, score_fusion, split,
+                          validate_restructure)
 from .stg import STG, Channel, Impl, Node, Selection  # noqa: F401

@@ -220,9 +220,67 @@ def folded_tokens_per_s(cfg: ModelConfig, shape: ShapeCfg, *, chips: int,
             "per_stage_us": per_stage, "fallbacks": fallbacks}
 
 
+def plan_fusion(cfg: ModelConfig, shape: ShapeCfg, plan_result: PlanResult, *,
+                periods_per_stage: int = 1,
+                host_us: dict[str, float] | None = None,
+                hw: Hardware = HW_V5E, max_tp: int = 256,
+                mb_seqs: int | None = None, slack: float = 1.0):
+    """Score candidate stage-fusion plans for a decode pipeline on the
+    virtual clock and return the winner (a ``restructure.FusionScore``).
+
+    The candidate space is the runtime stage chain exactly as
+    ``DecodePipeline`` builds it from this plan: ``embed``, one
+    ``blocksNN`` per ``periods_per_stage`` block periods, ``head``.
+    Device time per stage is the analytic II of its graph nodes under the
+    plan's selection, calibrated to microseconds against the plan's
+    ``v_firing_us`` (the ``measured_ratio``-style analytic->measured
+    bridge).  ``host_us`` is measured ``per_stage_host_us`` from an
+    executed pipeline, folded in as a per-stage fixed dispatch cost; when
+    absent every stage costs one dispatch unit, so the score minimizes
+    dispatch count subject to the structural guards.  Span-bearing
+    ``blocksNN`` stages are ``heavy`` — they never fuse with each other
+    (that axis is ``periods_per_stage``), so fusion absorbs the stateless
+    ``embed``/``head`` endpoints into their neighbours.
+
+    The loop closes on hardware: serve with the winner, feed the measured
+    ``per_stage_host_us`` (keyed by the fused names) back in, and the
+    re-score confirms the fixed point (``replan_to_fixed_point``-style).
+    """
+    from . import restructure
+    stg, _info = lm_graph.build_stg(cfg, shape, hw=hw, max_tp=max_tp,
+                                    mb_seqs=mb_seqs)
+    choices = {s.name: (s.impl, s.replicas) for s in plan_result.stages}
+    blocks = sorted(n for n in stg.nodes if n.startswith("block"))
+    pps = max(1, int(periods_per_stage))
+    spans = [(a, min(a + pps, len(blocks))) for a in range(0, len(blocks), pps)]
+    stage_names = (["embed"]
+                   + [f"blocks{i:02d}" for i in range(len(spans))]
+                   + ["head"])
+    owners = {"embed": ["embed"], "head": ["head"]}
+    for i, (a, b) in enumerate(spans):
+        owners[f"blocks{i:02d}"] = blocks[a:b]
+    # analytic node iter time -> microseconds via the plan's firing period
+    iter_t = {n: stg.nodes[n].impl(choices[n][0]).ii / max(1, choices[n][1])
+              for n in stg.nodes if n in choices}
+    v_app = max(iter_t.values())
+    us_per_unit = (plan_result.v_firing_us / v_app) if v_app > 0 else 0.0
+    dev_us, replicas = {}, {}
+    for sn in stage_names:
+        dev_us[sn] = sum(stg.nodes[n].impl(choices[n][0]).ii
+                         for n in owners[sn]) * us_per_unit
+        replicas[sn] = min(choices[n][1] for n in owners[sn])
+    heavy = [sn for sn in stage_names if sn.startswith("blocks")]
+    return restructure.auto_fusion(stage_names, host_us=host_us,
+                                   dev_us=dev_us, heavy=heavy,
+                                   replicas=replicas, slack=slack,
+                                   dev_in_score=host_us is not None)
+
+
 def replan(cfg: ModelConfig, shape: ShapeCfg, old: PlanResult, *,
            new_chips: int, engine: str = "heuristic",
            measured_ratio: dict[str, float] | None = None,
+           fusion_host_us: dict[str, float] | None = None,
+           periods_per_stage: int = 1,
            **kw) -> tuple[PlanResult, dict]:
     """Elastic rescale: re-solve for a new chip budget; diff vs old plan.
 
@@ -232,7 +290,13 @@ def replan(cfg: ModelConfig, shape: ShapeCfg, old: PlanResult, *,
 
     ``measured_ratio``: measured/analytic per-stage ratios from an executed
     pipeline (PipelineReport.ratios()); when given, the re-solve runs on
-    the measurement-calibrated graph (measurement-guided re-planning)."""
+    the measurement-calibrated graph (measurement-guided re-planning).
+
+    ``fusion_host_us``: measured ``per_stage_host_us`` from the running
+    pool; when given, the re-plan also re-scores stage fusion for the new
+    plan (``plan_fusion``) and reports the winning groups in
+    ``diff["fusion_groups"]`` — so an elastic rescale carries the
+    dispatch-deletion decision forward instead of silently unfusing."""
     new = plan(cfg, shape, chips=new_chips, engine=engine,
                ii_scale=measured_ratio, **kw)
     changed = []
@@ -248,4 +312,8 @@ def replan(cfg: ModelConfig, shape: ShapeCfg, old: PlanResult, *,
         "throughput_ratio": (new.tokens_per_s / old.tokens_per_s
                              if old.tokens_per_s else float("inf")),
     }
+    if fusion_host_us is not None:
+        diff["fusion_groups"] = plan_fusion(
+            cfg, shape, new, periods_per_stage=periods_per_stage,
+            host_us=fusion_host_us).groups
     return new, diff

@@ -94,6 +94,63 @@ def _head_fn(cfg: ModelConfig):
     return fn
 
 
+# Fused (combined) stage bodies: the sequential composition of the member
+# stages as ONE jitted program — the executable form of
+# `core.restructure.combine`.  A fused stage that absorbed embed takes raw
+# token ids instead of hidden states; one that absorbed head emits logits.
+# The member math is identical to the unfused programs (same models/lm
+# calls in the same order), and `optimization_barrier` pins each member
+# boundary as a materialisation point — numerically exactly what the
+# deleted fifo hop did — so XLA cannot fuse across it and re-round the
+# bf16 activations: token parity with the unfused pipeline is structural,
+# not coincidental.
+def _fused_prefill_fn(cfg: ModelConfig, has_embed: bool, has_head: bool):
+    dt = dtype_of(cfg.compute_dtype)
+
+    def fn(p, x, cap):
+        if has_embed:
+            x = jnp.take(p["embed"], x, axis=0).astype(dt)
+            x = jax.lax.optimization_barrier(x)
+        S = x.shape[1]
+        y, cache = lm.prefill_blocks(cfg, p["layers"], x, jnp.arange(S),
+                                     cap=cap)
+        if has_head:
+            h = jax.lax.optimization_barrier(y)[:, -1:]
+            h = rmsnorm(h, p["norm"], cfg.norm_eps)
+            y = h @ p["w"].astype(h.dtype)
+        return y, cache
+    return fn
+
+
+def _fused_decode_fn(cfg: ModelConfig, has_embed: bool, has_head: bool):
+    dt = dtype_of(cfg.compute_dtype)
+
+    def fn(p, cache, x, pos):
+        if has_embed:
+            x = jnp.take(p["embed"], x, axis=0).astype(dt)
+            x = jax.lax.optimization_barrier(x)
+        y, cache = lm.decode_blocks(cfg, p["layers"], cache, x, pos)
+        if has_head:
+            h = jax.lax.optimization_barrier(y)[:, -1:]
+            h = rmsnorm(h, p["norm"], cfg.norm_eps)
+            y = h @ p["w"].astype(h.dtype)
+        return y, cache
+    return fn
+
+
+@dataclass(frozen=True)
+class _StageDesc:
+    """One executed pipeline stage, possibly the fusion of several base
+    stages.  ``members`` are the base stage names in chain order;
+    ``span`` is the union of the members' block-period spans (None for a
+    lone embed/head)."""
+    name: str
+    members: tuple[str, ...]
+    has_embed: bool
+    span: tuple[int, int] | None
+    has_head: bool
+
+
 # ===========================================================================
 # run state
 # ===========================================================================
@@ -269,25 +326,45 @@ class _ServeStageProgram:
             return None
         return 0.0
 
+    def idle_reason(self):
+        """Why this stage's op queue is *empty*: the head hasn't sampled
+        the token that schedules the next op yet, so the stage is starved
+        on its input edge (the feedback stream for stage 0, the upstream
+        act fifo otherwise).  None once the token stream closed — run
+        drained, idleness isn't a wait.  The drivers consult this under
+        tracing so source stages (embed) appear in
+        ``stage_wait_s``/``per_stage_starve_ms`` instead of being
+        silently absent (their queue is refilled and their feedback
+        satisfied in the same head retirement, so the nonempty-queue wait
+        path never fires for them)."""
+        run = self.run
+        if run.feedback.closed:
+            return None
+        src = run.feedback if self.s == 0 else run.acts[self.s - 1]
+        return ("starve", src)
+
     def _task_for(self, kind: str, gid: int, pos: int, payload, rep: int):
         """Build the op body from in-hand inputs (``payload`` is the
         embedded/popped value) — shared by the normal dispatch path and
         failover replay, so a redo runs the exact math the lost op
         would have."""
-        s, S, pipe = self.s, self.S, self.pipe
+        s, pipe = self.s, self.pipe
         g = self.run.groups[gid]
+        desc = pipe.stage_descs[s]
         dev = pipe.stage_devices[s][rep]
         params = pipe.stage_params[s][rep]
-        if s == 0:                                        # embed
-            return (_run_stage, (pipe._embed, params, (payload,), dev))
-        if s == S - 1:                                    # head
-            return (_run_stage, (pipe._head, params, (payload,), dev))
+        if desc.span is None:                             # lone embed / head
+            prog = pipe._embed if desc.has_embed else pipe._head
+            return (_run_stage, (prog, params, (payload,), dev))
+        if desc.has_embed or desc.has_head:               # fused stage
+            pre, dec = pipe._fused[(desc.has_embed, desc.has_head)]
+        else:                                             # plain block stage
+            pre, dec = pipe._block_prefill, pipe._block_decode
         if kind == "P":
-            return (_run_stage_static_cap,
-                    (pipe._block_prefill, params, payload, g.cap, dev))
+            return (_run_stage_static_cap, (pre, params, payload, g.cap, dev))
         cache = self.caches[gid]
         return (_run_stage,
-                (pipe._block_decode, params,
+                (dec, params,
                  (cache, payload, jnp.asarray(pos, jnp.int32)), dev))
 
     def dispatch(self, op: Op, driver):
@@ -325,19 +402,20 @@ class _ServeStageProgram:
         return self._task_for(kind, gid, pos, payload, op.rep)
 
     def retire(self, op: Op, result, engine: Engine) -> float:
-        s, S, run = self.s, self.S, self.run
+        s, run = self.s, self.run
         out, t_done = result
         gid = run.gid_of[op.seq]
         self.done_count[gid] = self.done_count.get(gid, 0) + 1
         self.inflight[gid] = self.inflight.get(gid, 1) - 1
-        if s == S - 1:                                    # head: sample
-            run.on_head(op, out, t_done, engine)
-        elif s == 0:                                      # embed
-            engine.ordered_push(run.acts[s], op.seq, (gid, out), t_done)
-        else:                                             # block stage:
-            h, cache = out                                # cache stays
-            self.caches[gid] = cache                      # resident here
-            engine.ordered_push(run.acts[s], op.seq, (gid, h), t_done)
+        desc = self.pipe.stage_descs[s]
+        y = out
+        if desc.span is not None:                         # cache stays
+            y, cache = out                                # resident here
+            self.caches[gid] = cache
+        if desc.has_head:                                 # head: sample
+            run.on_head(op, y, t_done, engine)
+        else:
+            engine.ordered_push(run.acts[s], op.seq, (gid, y), t_done)
         return t_done
 
     # -- failover & rebalance -----------------------------------------------
@@ -557,6 +635,18 @@ class DecodePipeline:
     (default True) AOT-compiles every stage program for each group shape
     before the engine starts; ``compile_stats.late`` counts compiles
     that landed inside a timed serve (kept at zero by the default).
+
+    ``fusion_plan``: planner-selected stage combining
+    (`core.restructure`).  ``None`` runs every base stage as its own
+    program (the historical layout); ``"auto"`` scores candidate fusions
+    with `planner.plan_fusion`-equivalent rules on the analytic graph;
+    an explicit plan is a contiguous partition of the base stage chain,
+    e.g. ``[("embed", "blocks00"), ("blocks01",), ("blocks02",),
+    ("blocks03", "head")]``.  A fused stage runs ONE AOT program for the
+    member sequence — one host dispatch and one fewer FIFO hop per fused
+    boundary — with the member math unchanged (bitwise token parity vs
+    the unfused pipeline) and cache donation / KV-slice residency
+    preserved per member.
     """
 
     def __init__(self, cfg: ModelConfig, stg: STG, sel, *,
@@ -564,7 +654,8 @@ class DecodePipeline:
                  capacity_blocks: int = 2, seed: int = 0,
                  overlap: bool = True, replica_queue: int = 2,
                  workers: int | None = None, params=None,
-                 temperature: float = 0.0, warmup: bool = True):
+                 temperature: float = 0.0, warmup: bool = True,
+                 fusion_plan=None):
         from . import as_selection
         sel = as_selection(sel)
         if cfg.encdec or cfg.frontend:
@@ -601,9 +692,11 @@ class DecodePipeline:
         self.seed = seed               # to rebuild this pipeline elsewhere
         head_w = params["embed"].T if cfg.tie_embeddings else params["head"]
 
-        # stage list: embed, one per pps-period group, head.  Each block
-        # stage owns periods [a, b) == layers [a*L, b*L); its params and
-        # its runtime cache are `slice_periods` of the stacked pytrees.
+        # stage list: embed, one per pps-period group, head — then the
+        # fusion plan partitions that base chain into executed stages.
+        # Each block-owning stage owns periods [a, b) == layers
+        # [a*L, b*L); its params and its runtime cache are
+        # `slice_periods` of the stacked pytrees.
         self.stage_names: list[str] = []
         self.stage_params: list[dict] = []     # stage -> {rep: pytree}
         self.stage_devices: list[list] = []
@@ -616,23 +709,54 @@ class DecodePipeline:
 
         spans = [(a, min(a + pps, cfg.n_periods))
                  for a in range(0, cfg.n_periods, pps)]
-        stages = [("embed", None)] + [
+        base = [("embed", None)] + [
             (f"blocks{idx:02d}", sp) for idx, sp in enumerate(spans)] \
             + [("head", None)]
-        for name, span in stages:
-            if span is None:
-                owners = [name]
-                stage_p = ({"embed": params["embed"]} if name == "embed"
-                           else {"norm": params["final_norm"], "w": head_w})
-            else:
-                owners = owners_of(*span)
-                picks = {sel.choices[o] for o in owners}
+        groups = self._resolve_fusion(base, fusion_plan, stg, sel)
+        self.fusion_plan = (tuple(groups)
+                            if any(len(g) > 1 for g in groups) else None)
+        base_span = dict(base)
+        self.stage_descs: list[_StageDesc] = []
+        for grp in groups:
+            m_spans = [base_span[m] for m in grp if base_span[m] is not None]
+            span = (m_spans[0][0], m_spans[-1][1]) if m_spans else None
+            self.stage_descs.append(_StageDesc(
+                name="+".join(grp), members=tuple(grp),
+                has_embed="embed" in grp, span=span,
+                has_head="head" in grp))
+        for desc in self.stage_descs:
+            owners = ["embed"] if desc.has_embed else []
+            if desc.span is not None:
+                block_owners = owners_of(*desc.span)
+                owners.extend(block_owners)
+                picks = {sel.choices[o] for o in block_owners}
                 if len(picks) > 1:
                     raise ValueError(
-                        f"stage {name} groups graph nodes {owners} whose "
-                        f"plan choices differ ({sorted(picks)}) — use "
-                        f"periods_per_stage=1 or align the plan")
-                stage_p = lm.slice_periods(params["layers"], *span)
+                        f"stage {desc.name} groups graph nodes "
+                        f"{block_owners} whose plan choices differ "
+                        f"({sorted(picks)}) — use periods_per_stage=1 "
+                        f"or align the plan")
+            if desc.has_head:
+                owners.append("head")
+            head_p = {"norm": params["final_norm"], "w": head_w}
+            if desc.span is None:
+                stage_p = ({"embed": params["embed"]} if desc.has_embed
+                           else head_p)
+            elif desc.has_embed or desc.has_head:
+                # fused stage: member param trees keyed by role — the ONE
+                # fused program reads them all (one dispatch for the
+                # whole member sequence)
+                stage_p = {"layers": lm.slice_periods(params["layers"],
+                                                      *desc.span)}
+                if desc.has_embed:
+                    stage_p["embed"] = params["embed"]
+                if desc.has_head:
+                    stage_p.update(head_p)
+            else:
+                stage_p = lm.slice_periods(params["layers"], *desc.span)
+            # replica pool: every member owner's placement slices (same
+            # rule as jax_pipe — nr x n_owners copies, each doing the
+            # whole fused stage's work, same planned capacity)
             slices = [sl for owner in owners for sl in pl.replicas_of(owner)]
             devs, reps = [], {}
             for k, sl in enumerate(slices):
@@ -645,10 +769,10 @@ class DecodePipeline:
             if not devs:
                 devs = [devices[0]]
                 reps = {0: jax.device_put(stage_p, devices[0])}
-            self.stage_names.append(name)
+            self.stage_names.append(desc.name)
             self.stage_devices.append(devs)
             self.stage_params.append(reps)
-            self.period_span.append(span)
+            self.period_span.append(desc.span)
 
         # one embed program serves prefill AND decode traffic (one compile
         # cache — the old pair of jax.jit instances of the same function
@@ -677,6 +801,58 @@ class DecodePipeline:
                                         donate_argnums=(1,))
         self._head = AotProgram(_head_fn(cfg), name="head",
                                 stats=self.compile_stats)
+        # fused-stage programs, one (prefill, decode) pair per signature
+        # actually present in the plan.  The decode program donates the
+        # member cache exactly like the plain block program — fusion
+        # changes dispatch granularity, not the residency discipline.
+        self._fused: dict = {}
+        for desc in self.stage_descs:
+            key = (desc.has_embed, desc.has_head)
+            if desc.span is None or not any(key) or key in self._fused:
+                continue
+            tag = "+".join((["embed"] if key[0] else [])
+                           + ["blocks"] + (["head"] if key[1] else []))
+            self._fused[key] = (
+                AotProgram(_fused_prefill_fn(cfg, *key),
+                           name=f"fused.{tag}.prefill",
+                           stats=self.compile_stats, static_argnums=(2,)),
+                AotProgram(_fused_decode_fn(cfg, *key),
+                           name=f"fused.{tag}.decode",
+                           stats=self.compile_stats, donate_argnums=(1,)))
+
+    def _resolve_fusion(self, base, fusion_plan, stg, sel):
+        """Normalize ``fusion_plan`` to a contiguous partition of the base
+        stage chain.  ``"auto"`` scores candidates on the analytic graph
+        (`core.restructure.auto_fusion`): span-bearing block stages are
+        ``heavy`` (they never fuse together — that axis is
+        ``periods_per_stage``), so the scorer absorbs the stateless
+        embed/head endpoints into their neighbours, minimizing host
+        dispatches per token."""
+        names = [n for n, _ in base]
+        if fusion_plan is None:
+            return [(n,) for n in names]
+        if fusion_plan == "auto":
+            from ...core import restructure
+            L = len(self.cfg.block_pattern)
+            dev, reps = {}, {}
+            for name, span in base:
+                owners = [name] if span is None else [
+                    f"block{li:02d}"
+                    for li in range(span[0] * L, span[1] * L)]
+                dev[name] = sum(sel.impl_of(stg, o).ii for o in owners)
+                reps[name] = min(sel.replicas(o) for o in owners)
+            heavy = [n for n, sp in base if sp is not None]
+            return [tuple(g) for g in restructure.auto_fusion(
+                names, dev_us=dev, heavy=heavy, replicas=reps,
+                dev_in_score=False).groups]
+        groups = [(g,) if isinstance(g, str) else tuple(g)
+                  for g in fusion_plan]
+        flat = [n for g in groups for n in g]
+        if flat != names:
+            raise ValueError(
+                f"fusion_plan {groups} is not a contiguous partition of "
+                f"the stage chain {names}")
+        return groups
 
     # -- sampling -----------------------------------------------------------
     def _sample(self, logits, gid: int, temperature: float | None = None):
@@ -730,8 +906,7 @@ class DecodePipeline:
         cfg = self.cfg
         dt = dtype_of(cfg.compute_dtype)
         d = cfg.d_model
-        S = len(self.stage_names)
-        for s in range(S):
+        for s, desc in enumerate(self.stage_descs):
             for rep, dev in enumerate(self.stage_devices[s]):
                 sh = SingleDeviceSharding(dev)
                 params = self.stage_params[s][rep]
@@ -739,32 +914,40 @@ class DecodePipeline:
                 def sds(*shape, dtype=dt):
                     return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
 
-                if s == 0:
-                    self._embed.precompile(params, sds(batch, bucket,
-                                                       dtype=jnp.int32))
-                    self._embed.precompile(params, sds(batch, 1,
-                                                       dtype=jnp.int32))
-                elif s == S - 1:
-                    self._head.precompile(params, sds(batch, bucket, d))
-                    self._head.precompile(params, sds(batch, 1, d))
-                    if (self.temperature or 0.0) <= 0.0:
-                        # greedy sampling is eager jnp ops: execute once
-                        # per device so the op cache is warm too
-                        z = jax.device_put(
-                            jnp.zeros((batch, 1, cfg.padded_vocab), dt), dev)
-                        self._sample(z, gid=-1)
+                if desc.span is None:
+                    if desc.has_embed:
+                        self._embed.precompile(params, sds(batch, bucket,
+                                                           dtype=jnp.int32))
+                        self._embed.precompile(params, sds(batch, 1,
+                                                           dtype=jnp.int32))
+                    else:
+                        self._head.precompile(params, sds(batch, bucket, d))
+                        self._head.precompile(params, sds(batch, 1, d))
                 else:
-                    xp = sds(batch, bucket, d)
-                    self._block_prefill.precompile(params, xp, cap)
+                    if desc.has_embed or desc.has_head:
+                        pre, dec = self._fused[(desc.has_embed,
+                                                desc.has_head)]
+                        xp = sds(batch, bucket, dtype=jnp.int32) \
+                            if desc.has_embed else sds(batch, bucket, d)
+                        xd = sds(batch, 1, dtype=jnp.int32) \
+                            if desc.has_embed else sds(batch, 1, d)
+                    else:
+                        pre, dec = self._block_prefill, self._block_decode
+                        xp, xd = sds(batch, bucket, d), sds(batch, 1, d)
+                    pre.precompile(params, xp, cap)
                     _, cache_s = jax.eval_shape(
-                        lambda p, x: self._block_prefill.fn(p, x, cap),
-                        params, xp)
+                        lambda p, x: pre.fn(p, x, cap), params, xp)
                     cache_sh = jax.tree.map(
                         lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype,
                                                        sharding=sh), cache_s)
-                    self._block_decode.precompile(
-                        params, cache_sh, sds(batch, 1, d),
-                        sds(dtype=jnp.int32))
+                    dec.precompile(params, cache_sh, xd,
+                                   sds(dtype=jnp.int32))
+                if desc.has_head and (self.temperature or 0.0) <= 0.0:
+                    # greedy sampling is eager jnp ops: execute once
+                    # per device so the op cache is warm too
+                    z = jax.device_put(
+                        jnp.zeros((batch, 1, cfg.padded_vocab), dt), dev)
+                    self._sample(z, gid=-1)
         self._warmed.add(key)
 
     def graph_stage_map(self) -> dict[str, str]:
@@ -774,12 +957,14 @@ class DecodePipeline:
         streams against the decode-shape plan."""
         L = len(self.cfg.block_pattern)
         out = {}
-        for name, span in zip(self.stage_names, self.period_span):
-            if span is None:
-                out[name] = name
-            else:
-                for li in range(span[0] * L, span[1] * L):
-                    out[f"block{li:02d}"] = name
+        for desc in self.stage_descs:
+            if desc.has_embed:
+                out["embed"] = desc.name
+            if desc.span is not None:
+                for li in range(desc.span[0] * L, desc.span[1] * L):
+                    out[f"block{li:02d}"] = desc.name
+            if desc.has_head:
+                out["head"] = desc.name
         return out
 
     def _replay_cache(self, run: "_ServeRun", g: _Group, s_target: int,
@@ -801,21 +986,34 @@ class DecodePipeline:
             rep = new_rep if s == s_target else run.programs[s].rep_of(gid)
             return self.stage_params[s][rep], self.stage_devices[s][rep]
 
-        e_par, e_dev = par_dev(0)
-        h = self._embed(e_par, jax.device_put(jnp.asarray(g.tokens), e_dev))
+        def progs(desc):
+            if desc.has_embed or desc.has_head:
+                return self._fused[(desc.has_embed, desc.has_head)]
+            return self._block_prefill, self._block_decode
+
         caches = {}
-        for s in range(1, s_target + 1):
+        x = jnp.asarray(g.tokens)
+        for s in range(s_target + 1):
+            desc = self.stage_descs[s]
             par, dev = par_dev(s)
-            h, caches[s] = self._block_prefill(
-                par, jax.device_put(h, dev), g.cap)
+            if desc.span is None:              # lone embed (head is last,
+                x = self._embed(               # never precedes a target)
+                    par, jax.device_put(x, dev))
+                continue
+            pre, _dec = progs(desc)
+            x, caches[s] = pre(par, jax.device_put(x, dev), g.cap)
         for j in range(k - 1):
-            x = self._embed(e_par, jax.device_put(
-                jnp.asarray(g.fed[j][:, None]), e_dev))
+            x = jnp.asarray(g.fed[j][:, None])
             pos = jnp.asarray(g.bucket + j, jnp.int32)
-            for s in range(1, s_target + 1):
+            for s in range(s_target + 1):
+                desc = self.stage_descs[s]
                 par, dev = par_dev(s)
-                x, caches[s] = self._block_decode(
-                    par, caches[s], jax.device_put(x, dev), pos)
+                if desc.span is None:
+                    x = self._embed(par, jax.device_put(x, dev))
+                    continue
+                _pre, dec = progs(desc)
+                x, caches[s] = dec(par, caches[s],
+                                   jax.device_put(x, dev), pos)
         return caches[s_target]
 
     # -- serving ------------------------------------------------------------
@@ -931,7 +1129,6 @@ class DecodePipeline:
             res.fifo_stats[("act", s)] = run.acts[s].stats
         res.fifo_stats["feedback"] = run.feedback.stats
         if run.parked:
-            S = len(names)
             res.paused = True
             res.resume_state = ResumeState(
                 groups=run.groups, group_of=list(group_of),
@@ -939,7 +1136,8 @@ class DecodePipeline:
                 stage_caches={
                     names[s]: {"span": self.period_span[s],
                                "caches": dict(run.programs[s].caches)}
-                    for s in range(1, S - 1)})
+                    for s in range(len(names))
+                    if self.period_span[s] is not None})
         return res, engine
 
     def resume(self, state: ResumeState, *, capacity_blocks: int = 2,

@@ -229,6 +229,27 @@ class Driver:
                 reason = "reorder"
         return (reason, label)
 
+    def idle_reason_of(self, prog) -> tuple[str, str] | None:
+        """Why ``prog``'s op queue is *empty* (vs ``wait_reason_of``,
+        which explains a deferred nonempty queue).  Programs whose ops
+        are scheduled by upstream traffic (decode stages waiting on the
+        head's token loop) expose an optional ``idle_reason()`` hook
+        returning ``(reason, fifo)`` or None; without it — or once the
+        program reports the stream over — an empty queue is not a wait.
+        This is what puts the *source* stage (embed) into
+        ``stage_wait_s``: its queue refills and its feedback token land
+        in the same head retirement, so the nonempty-queue wait path
+        never fires for it."""
+        hook = getattr(prog, "idle_reason", None)
+        if hook is None:
+            return None
+        r = hook()
+        if r is None:
+            return None
+        reason, fifo = r
+        label = getattr(fifo, "label", None) or "" if fifo is not None else ""
+        return (reason, label)
+
 
 # ===========================================================================
 # wall-clock driver: asynchronous overlapped scheduler
@@ -516,6 +537,11 @@ class Engine(Driver):
                     prog = self.programs[s]
                     op = prog.peek()
                     if op is None:
+                        if tr is not None and wait_since[s] is None:
+                            r = self.idle_reason_of(prog)
+                            if r is not None:
+                                wait_since[s] = (
+                                    time.perf_counter() - self.t0, r)
                         continue
                     if self._busy[s][op.rep] >= self.replica_queue:
                         continue
@@ -767,6 +793,10 @@ class EventLoop(Driver):
             prog = programs[name]
             op = prog.peek()
             if op is None:
+                if tr is not None and name not in wait_since:
+                    r = self.idle_reason_of(prog)
+                    if r is not None:
+                        wait_since[name] = (self.now, r)
                 return
             t = prog.ready(op)
             if t is not None:

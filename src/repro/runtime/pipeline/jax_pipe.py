@@ -145,6 +145,28 @@ class LMStage:
         return self.devices[0]
 
 
+@jax.custom_vjp
+def _act_barrier(x):
+    """A differentiable `optimization_barrier`: pins a fused-stage member
+    boundary as a materialisation point so XLA cannot fuse across it and
+    re-round bf16 activations — numerically exactly what the deleted
+    fifo hop did.  The cotangent is barriered too (the staged backward
+    pass materialises it at the same boundary), so fused grads stay
+    bitwise-equal to the staged composition."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _act_barrier_fwd(x):
+    return _act_barrier(x), None
+
+
+def _act_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_act_barrier.defvjp(_act_barrier_fwd, _act_barrier_bwd)
+
+
 def _embed_fwd(cfg: ModelConfig):
     def fwd(p, tokens):
         return p["emb"][tokens].astype(jnp.bfloat16)
@@ -521,7 +543,8 @@ class LMPipeline:
                  overlap: bool = True, prefetch_blocks: int = 1,
                  replica_queue: int = 2, workers: int | None = None,
                  policy: ShardingPolicy | None = None,
-                 schedule: Schedule | None = None, warmup: bool = True):
+                 schedule: Schedule | None = None, warmup: bool = True,
+                 fusion_plan=None):
         self.cfg = cfg
         self.schedule = schedule
         devices = list(devices if devices is not None else jax.devices())
@@ -606,8 +629,91 @@ class LMPipeline:
                                stats=self.compile_stats),
                 params=reps, devices=devs, x_shardings=x_shs, meshes=meshes,
                 acc=tree_add_program(f"{name}.acc", self.compile_stats)))
+        self.fusion_plan = None
+        if fusion_plan is not None:
+            groups = self._resolve_fusion(fusion_plan)
+            if any(len(g) > 1 for g in groups):
+                self.stages = self._fuse_lm_stages(groups, fwds)
+                self.fusion_plan = tuple(groups)
         self.capacity_blocks = capacity_blocks
         self.workers = workers
+
+    def _resolve_fusion(self, fusion_plan) -> list[tuple[str, ...]]:
+        """Normalise ``fusion_plan`` into a contiguous partition of the
+        built stage names.  ``"auto"`` asks `core.restructure.auto_fusion`
+        (block stages form the ``heavy`` set — merging them is
+        ``layers_per_stage``'s job; fusion absorbs the stateless
+        endpoints); an explicit plan is a list of adjacent-name tuples."""
+        names = [st.name for st in self.stages]
+        if fusion_plan == "auto":
+            from repro.core import restructure
+            heavy = [n for n in names if n.startswith("block")]
+            reps = {st.name: len(st.devices) for st in self.stages}
+            return list(restructure.auto_fusion(
+                names, heavy=heavy, replicas=reps,
+                dev_in_score=False).groups)
+        groups = [tuple(g) if isinstance(g, (tuple, list)) else (g,)
+                  for g in fusion_plan]
+        flat = [n for g in groups for n in g]
+        if flat != names:
+            raise ValueError(
+                f"fusion_plan {groups} is not a contiguous partition of "
+                f"the built stages {names}")
+        return groups
+
+    def _fuse_lm_stages(self, groups: list[tuple[str, ...]],
+                        fwds: dict) -> list[LMStage]:
+        """Rewrite ``self.stages`` under a fusion plan: each multi-member
+        group becomes ONE stage whose forward is the sequential
+        composition of the members' raw fns over params keyed by member
+        name — one AOT program, one dispatch, one fifo hop deleted per
+        fused boundary.  Replicas POOL the members' placement slices
+        (each pooled replica holds every member's params and does the
+        whole group's work), so the plan's device budget is kept and a
+        fused stage natively has >= 2 replicas for failover whenever its
+        members had distinct slices.  The composition keeps the eager
+        ``jax.vjp`` call structure, so train-path grads stay
+        bitwise-identical to the sequential reference (the fused grad
+        tree is the members' trees under their name keys).
+
+        tp-sharded members are rejected: composing across differently
+        meshed param shardings would need a resharding pass the runtime
+        does not have (a named ROADMAP follow-on)."""
+        by_name = {st.name: st for st in self.stages}
+        out: list[LMStage] = []
+        for grp in groups:
+            if len(grp) == 1:
+                out.append(by_name[grp[0]])
+                continue
+            members = [by_name[n] for n in grp]
+            for m in members:
+                if m.meshes and any(mesh is not None for mesh in m.meshes):
+                    raise ValueError(
+                        f"cannot fuse tp-sharded stage {m.name}: stage "
+                        f"combining requires single-device members")
+            name = "+".join(grp)
+            member_fns = [fwds[n] for n in grp]
+
+            def fused_fn(p, x, _fns=tuple(member_fns), _names=tuple(grp)):
+                for i, (nm, fn) in enumerate(zip(_names, _fns)):
+                    if i:
+                        x = _act_barrier(x)
+                    x = fn(p[nm], x)
+                return x
+
+            devs = [d for m in members for d in m.devices]
+            reps = {k: {m.name: jax.device_put(m.params[0], dev)
+                        for m in members}
+                    for k, dev in enumerate(devs)}
+            out.append(LMStage(
+                name=name,
+                fwd=AotProgram(fused_fn, name=f"{name}.fwd",
+                               stats=self.compile_stats),
+                params=reps, devices=devs,
+                x_shardings=[None] * len(devs),
+                meshes=[None] * len(devs),
+                acc=tree_add_program(f"{name}.acc", self.compile_stats)))
+        return out
 
     @property
     def n_stages(self) -> int:

@@ -61,6 +61,10 @@ class ServeStats:
     decode_s: float = 0.0
     rounds: int = 0
     compiles: set = field(default_factory=set)
+    decode_step_s: list = field(default_factory=list)
+    # per-decode-step wall gaps (single-device backend): the `int(nxt[i])`
+    # conversions host-sync every step, so each gap is a real step time —
+    # honest p50/p95 material, not a per-request mean smeared flat
     slo: dict | None = None        # last pipelined serve's client-side
     #                                percentiles (`ServeRunResult.slo()`);
     #                                None on the single-device backend
@@ -152,6 +156,7 @@ class LMServer:
         budget = np.array([r.max_new for r in reqs])
 
         t1 = time.perf_counter()
+        t_step = t1
         steps = 0
         cur = last[:, None]
         while not done.all() and steps < budget.max() - 1:
@@ -166,6 +171,9 @@ class LMServer:
                         done[i] = True
                 elif not done[i]:
                     done[i] = True
+            now = time.perf_counter()
+            self.stats.decode_step_s.append(now - t_step)
+            t_step = now
             cur = nxt[:, None]
         jax.block_until_ready(cur)
         t_decode = time.perf_counter() - t1

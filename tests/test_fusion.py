@@ -1,0 +1,192 @@
+"""Executable stage fusion (`fusion_plan` on both executors).
+
+Acceptance contract:
+  * a fused `DecodePipeline` generates bitwise-identical tokens to the
+    unfused pipeline (and hence the single-device reference) with
+    ``late == 0`` compile stats — one AOT program per combined stage;
+  * ``fusion_plan="auto"`` selects the planner's endpoint fusion
+    (embed+blocks00, blocks03+head on the tiny decode plan);
+  * the source stage (embed) appears in traced ``stage_wait_s`` — the
+    engine attributes queue-empty idle via ``idle_reason()``;
+  * a replica of a COMBINED stage can crash mid-decode and fail over
+    with bitwise token parity + failover evidence (replica pooling gives
+    a fused stage its members' slices);
+  * elastic rescale carries the fusion plan to the successor pipeline;
+  * the fused training pipeline (`LMPipeline`) matches the unfused run
+    bitwise on losses AND grads (member-keyed grad trees).
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg
+from repro.configs.tiny import CONFIG as tiny
+from repro.core import planner
+from repro.graphs import lm_graph
+from repro.runtime.pipeline import (DecodePipeline, LMPipeline, Tracer,
+                                    as_selection)
+from repro.runtime.failures import ReplicaFaultPlan
+
+TARGET = (("embed", "blocks00"), ("blocks01",), ("blocks02",),
+          ("blocks03", "head"))
+
+
+@pytest.fixture(scope="module")
+def fusion_setup():
+    shape = ShapeCfg("fusion_test", 64, 16, "decode")
+    plan = planner.plan(tiny, shape, chips=8, max_tp=4)
+    stg, _ = lm_graph.build_stg(tiny, shape, max_tp=4)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, tiny.vocab, rng.integers(4, 20)).tolist()
+               for _ in range(8)]
+    base = DecodePipeline(tiny, stg, plan)
+    ref = base.serve(prompts, 12, group_size=4)
+    return shape, plan, stg, prompts, base, ref
+
+
+def test_fused_decode_token_parity_and_aot(fusion_setup):
+    _, plan, stg, prompts, _, ref = fusion_setup
+    pipe = DecodePipeline(tiny, stg, plan, fusion_plan=list(TARGET))
+    assert pipe.stage_names == ["embed+blocks00", "blocks01", "blocks02",
+                                "blocks03+head"]
+    res = pipe.serve(prompts, 12, group_size=4)
+    assert res.tokens == ref.tokens
+    assert pipe.compile_stats.late == 0, pipe.compile_stats.summary()
+
+
+def test_auto_fusion_selects_planner_groups(fusion_setup):
+    _, plan, stg, prompts, _, ref = fusion_setup
+    pipe = DecodePipeline(tiny, stg, plan, fusion_plan="auto")
+    assert pipe.fusion_plan == TARGET
+    res = pipe.serve(prompts, 12, group_size=4)
+    assert res.tokens == ref.tokens
+
+
+def test_fused_serial_engine_parity(fusion_setup):
+    """The serial A/B driver (overlap=False) runs the same fused stage
+    graph and must produce identical tokens."""
+    _, plan, stg, prompts, _, ref = fusion_setup
+    pipe = DecodePipeline(tiny, stg, plan, fusion_plan=list(TARGET),
+                          overlap=False)
+    res = pipe.serve(prompts, 12, group_size=4)
+    assert res.tokens == ref.tokens
+
+
+def test_fusion_plan_must_be_contiguous_partition(fusion_setup):
+    _, plan, stg, _, _, _ = fusion_setup
+    with pytest.raises(ValueError, match="contiguous partition"):
+        DecodePipeline(tiny, stg, plan,
+                       fusion_plan=[("embed", "blocks01"), ("blocks00",),
+                                    ("blocks02",), ("blocks03", "head")])
+    with pytest.raises(ValueError, match="contiguous partition"):
+        DecodePipeline(tiny, stg, plan, fusion_plan=[("embed", "blocks00")])
+
+
+def test_embed_idle_is_accounted(fusion_setup):
+    """Satellite: the source stage's queue-empty waits (its op arrives in
+    the same head retirement that pushes its feedback token) now open
+    spans via ``idle_reason()`` — embed no longer vanishes from the
+    stall/starve attribution."""
+    _, plan, stg, prompts, base, _ = fusion_setup
+    tr = Tracer()
+    res = base.serve(prompts, 24, group_size=4, tracer=tr)
+    assert "embed" in res.stage_wait_s
+    assert res.stage_wait_s["embed"].get("starve", 0.0) > 0.0
+    # the fused pipeline's source stage is accounted under its fused name
+    fpipe = DecodePipeline(tiny, stg, plan, fusion_plan=list(TARGET))
+    res_f = fpipe.serve(prompts, 24, group_size=4, tracer=Tracer())
+    assert "embed+blocks00" in res_f.stage_wait_s
+
+
+def test_fused_stage_failover_bitwise_parity(fusion_setup):
+    """Kill a replica of a COMBINED stage mid-decode: replica pooling
+    (the fused stage unions its members' placement slices) leaves a
+    survivor, lost ops replay, and token parity holds bitwise."""
+    _, plan, stg, prompts, _, ref = fusion_setup
+    pipe = DecodePipeline(tiny, stg, plan, fusion_plan=list(TARGET))
+    s = pipe.stage_names.index("embed+blocks00")
+    assert len(pipe.stage_devices[s]) >= 2, "fused stage lost its pooled replicas"
+    inj = ReplicaFaultPlan.parse("embed+blocks00:r1@tok6=crash")
+    tr = Tracer()
+    res = pipe.serve(prompts, 12, group_size=4, injector=inj, tracer=tr)
+    assert inj.fired == 1
+    assert res.tokens == ref.tokens
+    assert len(res.failovers) == 1
+    fo = res.failovers[0]
+    assert fo["stage"] == "embed+blocks00" and fo["kind"] == "crash"
+    assert fo["recovery_s"] >= 0.0
+    assert tr.failovers and tr.failovers[0][0] == "embed+blocks00"
+
+
+def test_fused_rescale_preserves_fusion_plan(fusion_setup):
+    """Elastic rescale rebuilds the pipeline with the same fusion plan and
+    the resumed serve stays bitwise."""
+    from repro.runtime.elastic import rescale_serving
+
+    shape, plan, stg, prompts, _, ref = fusion_setup
+    pipe = DecodePipeline(tiny, stg, plan, fusion_plan=list(TARGET))
+    paused = pipe.serve(prompts, 12, group_size=4, pause_after_tokens=3)
+    assert paused.paused and paused.resume_state is not None
+    rs = rescale_serving(pipe, tiny, shape, plan, new_chips=6, stg=stg,
+                         measured_ratio={"embed+blocks00": 2.0})
+    assert rs.pipe.fusion_plan == TARGET
+    res = rs.pipe.resume(paused.resume_state)
+    assert res.tokens == ref.tokens
+
+
+# ===========================================================================
+# training path (LMPipeline)
+# ===========================================================================
+def test_fused_lm_pipeline_bitwise_losses_and_grads():
+    import jax
+    import jax.numpy as jnp
+
+    shape = ShapeCfg("fusion_train", 64, 16, "train")
+    plan = planner.plan(tiny, shape, chips=8, max_tp=4)
+    stg, _ = lm_graph.build_stg(tiny, shape, max_tp=4)
+    sel = as_selection(plan)
+    mbs = [np.random.default_rng(i).integers(
+        2, tiny.vocab, (2, 16)).astype(np.int32) for i in range(4)]
+
+    def loss(lg):
+        return jnp.mean(lg.astype(jnp.float32) ** 2)
+
+    pu = LMPipeline(tiny, stg, sel)
+    ru = pu.run(mbs, train=True, loss_fn=loss)
+    fp = [("embed", "block00"), ("block01",), ("block02",),
+          ("block03", "head")]
+    pf = LMPipeline(tiny, stg, sel, fusion_plan=fp)
+    assert [s.name for s in pf.stages] == \
+        ["embed+block00", "block01", "block02", "block03+head"]
+    rf = pf.run(mbs, train=True, loss_fn=loss)
+
+    for mb in ru.losses:
+        assert float(ru.losses[mb]) == float(rf.losses[mb])
+
+    def assert_tree_equal(a, b):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        assert len(la) == len(lb)
+        for x, y in zip(la, lb):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+    assert_tree_equal(ru.grads["embed"], rf.grads["embed+block00"]["embed"])
+    assert_tree_equal(ru.grads["block00"],
+                      rf.grads["embed+block00"]["block00"])
+    assert_tree_equal(ru.grads["block01"], rf.grads["block01"])
+    assert_tree_equal(ru.grads["block03"],
+                      rf.grads["block03+head"]["block03"])
+    assert_tree_equal(ru.grads["head"], rf.grads["block03+head"]["head"])
+
+
+def test_fused_lm_pipeline_serve_outputs_bitwise():
+    shape = ShapeCfg("fusion_serve", 64, 16, "train")
+    plan = planner.plan(tiny, shape, chips=8, max_tp=4)
+    stg, _ = lm_graph.build_stg(tiny, shape, max_tp=4)
+    sel = as_selection(plan)
+    mbs = [np.random.default_rng(i).integers(
+        2, tiny.vocab, (2, 16)).astype(np.int32) for i in range(3)]
+    ru = LMPipeline(tiny, stg, sel).run(mbs)
+    pf = LMPipeline(tiny, stg, sel, fusion_plan="auto")
+    rf = pf.run(mbs)
+    assert pf.compile_stats.late == 0
+    for a, b in zip(ru.outputs, rf.outputs):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

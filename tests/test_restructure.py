@@ -1,0 +1,261 @@
+"""Stage combining & splitting (`core/restructure`): plan-level rewrites.
+
+Acceptance contract:
+  * ``combine`` merges a linear chain into one node with II/area/latency
+    sums and deletes the internal channels; ``split`` of the result
+    restores the originals bit-for-bit (round trip on IIs, areas, impls,
+    channel keys, Selection);
+  * ``split`` of a plain node partitions II/area at the declared cut and
+    ``combine`` of the halves restores the original exactly;
+  * rewrites are functionally invisible: the KPN simulator produces the
+    same sink streams before and after a combine;
+  * ``auto_fusion`` selects endpoint fusion on the tiny decode chain
+    (under uniform and measured host cost, and at the fixed point when
+    re-scored with fused-run measurement keys) and structurally refuses
+    to fuse two heavy (state-owning) stages;
+  * `planner.plan_fusion` drives the scorer from a real plan.
+"""
+import math
+
+import pytest
+
+from repro.configs.base import ShapeCfg
+from repro.configs.tiny import CONFIG as tiny
+from repro.core import planner, restructure
+from repro.core.restructure import (auto_fusion, combine, enumerate_fusions,
+                                    score_fusion, split)
+from repro.core.simulate import run_functional
+from repro.core.stg import STG, Impl, Node, Selection, unit_rate_node
+from repro.graphs import lm_graph
+
+
+# ===========================================================================
+# fixtures
+# ===========================================================================
+def _chain(iis, areas=None, with_fns=True):
+    """src -> n0 -> n1 -> ... -> out, unit rates, +1 per hop."""
+    areas = areas or [1.0] * len(iis)
+    g = STG()
+    g.add_node(Node("src", impls=(Impl("s", 0, 1e-9),), kind="source"))
+    prev = "src"
+    for k, (ii, area) in enumerate(zip(iis, areas)):
+        def mk():
+            def fn(inputs, state):
+                return [[inputs[0][0] + 1]], state
+            return fn
+        g.add_node(unit_rate_node(f"n{k}", [Impl("v1", area, ii)],
+                                  fn=mk() if with_fns else None))
+        g.connect(prev, f"n{k}")
+        prev = f"n{k}"
+    g.add_node(Node("out", impls=(Impl("t", 0, 1e-9),), kind="sink"))
+    g.connect(prev, "out")
+    g.validate()
+    return g
+
+
+def _lm_setup():
+    shape = ShapeCfg("restructure_test", 64, 16, "decode")
+    plan = planner.plan(tiny, shape, chips=8, max_tp=4)
+    stg, _ = lm_graph.build_stg(tiny, shape, max_tp=4)
+    sel = Selection()
+    for sp in plan.stages:
+        sel.set(sp.name, sp.impl, sp.replicas)
+    return shape, plan, stg, sel
+
+
+# ===========================================================================
+# combine
+# ===========================================================================
+def test_combine_sums_ii_area_and_deletes_channel():
+    g = _chain([2.0, 3.0, 5.0], areas=[10.0, 20.0, 40.0])
+    sel = Selection.fastest(g)
+    rg = combine(g, sel, ["n0", "n1"])
+    fused = rg.stg.nodes["n0+n1"]
+    im = rg.selection.impl_of(rg.stg, "n0+n1")
+    assert im.ii == 5.0 and im.area == 30.0
+    assert rg.groups == {"n0+n1": ("n0", "n1")}
+    assert [c.key() for c in rg.deleted_channels] == [("n0", 0, "n1", 0)]
+    keys = {(c.src, c.dst) for c in rg.stg.channels}
+    assert ("src", "n0+n1") in keys and ("n0+n1", "n2") in keys
+    assert fused.kind == "compute"
+
+
+def test_combine_is_functionally_invisible():
+    g = _chain([1.0, 2.0, 1.0])
+    sel = Selection.fastest(g)
+    before = run_functional(g, sel, {"src": list(range(16))})
+    rg = combine(g, sel, ["n1", "n2"])
+    after = run_functional(rg.stg, rg.selection, {"src": list(range(16))})
+    assert before["out"] == after["out"] == [x + 3 for x in range(16)]
+
+
+def test_combined_timed_throughput_matches_analysis():
+    """Virtual clock: the combined graph's simulated inverse throughput
+    tracks the analytic model (II sums; the fused node is the new
+    bottleneck)."""
+    from repro.core.simulate import run as sim_run
+    from repro.core.throughput import analyze
+
+    g = _chain([2.0, 3.0, 4.0])
+    sel = Selection.fastest(g)
+    rg = combine(g, sel, ["n0", "n1"])
+    res = sim_run(rg.stg, rg.selection, {"src": list(range(200))})
+    ana = analyze(rg.stg, rg.selection)
+    assert math.isclose(ana.v_app, 5.0)
+    assert math.isclose(res.inverse_throughput("out"), ana.v_app,
+                        rel_tol=0.05)
+
+
+def test_combine_rejects_nonlinear_and_mismatched():
+    g = _chain([1.0, 1.0, 1.0])
+    sel = Selection.fastest(g)
+    with pytest.raises(ValueError, match="at least two"):
+        combine(g, sel, ["n0"])
+    with pytest.raises(ValueError, match="exactly one channel"):
+        combine(g, sel, ["n0", "n2"])          # not adjacent
+    with pytest.raises(KeyError):
+        combine(g, sel, ["n0", "nope"])
+    with pytest.raises(ValueError, match="only compute"):
+        combine(g, sel, ["src", "n0"])
+    sel2 = Selection.fastest(g).set("n1", "v1", 2)
+    with pytest.raises(ValueError, match="replica counts"):
+        combine(g, sel2, ["n0", "n1"])
+
+
+# ===========================================================================
+# split + round trips
+# ===========================================================================
+def test_split_combine_round_trip_restores_exactly():
+    g = _chain([2.0, 3.0], areas=[8.0, 16.0])
+    sel = Selection.fastest(g)
+    rg = split(g, sel, "n1", cut=0.4)
+    a, b = rg.groups["n1"]
+    ia = rg.selection.impl_of(rg.stg, a)
+    ib = rg.selection.impl_of(rg.stg, b)
+    assert math.isclose(ia.ii + ib.ii, 3.0)
+    assert math.isclose(ia.ii, 0.4 * 3.0)
+    assert math.isclose(ia.area + ib.area, 16.0)
+    back = combine(rg.stg, rg.selection, [a, b])
+    assert set(back.stg.nodes) == set(g.nodes)
+    assert back.selection.choices == sel.choices
+    assert {c.key() for c in back.stg.channels} == \
+        {c.key() for c in g.channels}
+    im = back.selection.impl_of(back.stg, "n1")
+    assert im.ii == 3.0 and im.area == 16.0
+    # the restored node kept its executable fn
+    outs = run_functional(back.stg, back.selection, {"src": [0, 1, 2]})
+    assert outs["out"] == [2, 3, 4]
+
+
+def test_combine_split_round_trip_restores_exactly():
+    g = _chain([2.0, 3.0, 5.0], areas=[1.0, 2.0, 4.0])
+    sel = Selection.fastest(g)
+    rg = combine(g, sel, ["n1", "n2"])
+    back = split(rg.stg, rg.selection, "n1+n2")
+    assert set(back.stg.nodes) == set(g.nodes)
+    assert {c.key() for c in back.stg.channels} == \
+        {c.key() for c in g.channels}
+    for n in ("n1", "n2"):
+        assert back.selection.impl_of(back.stg, n).ii == \
+            sel.impl_of(g, n).ii
+        assert back.selection.impl_of(back.stg, n).area == \
+            sel.impl_of(g, n).area
+    assert back.selection.choices == sel.choices
+
+
+def test_split_rejects_bad_cut():
+    g = _chain([1.0, 4.0])
+    sel = Selection.fastest(g)
+    for cut in (0.0, 1.0, -0.5, 2.0):
+        with pytest.raises(ValueError, match="cut"):
+            split(g, sel, "n1", cut=cut)
+    with pytest.raises(KeyError):
+        split(g, sel, "nope")
+
+
+def test_round_trip_on_lm_graph():
+    """combine/split on the real decode-shape LM graph, untouched channels
+    preserved verbatim (the `validate_restructure` contract)."""
+    _, _, stg, sel = _lm_setup()
+    blocks = sorted(n for n in stg.nodes if n.startswith("block"))
+    rg = combine(stg, sel, ["embed", blocks[0]])
+    assert "embed+" + blocks[0] in rg.stg.nodes
+    back = split(rg.stg, rg.selection, "embed+" + blocks[0])
+    assert set(back.stg.nodes) == set(stg.nodes)
+    assert {c.key() for c in back.stg.channels} == \
+        {c.key() for c in stg.channels}
+    assert back.selection.choices == sel.choices
+
+
+# ===========================================================================
+# fusion scoring
+# ===========================================================================
+NAMES = ["embed", "blocks00", "blocks01", "blocks02", "blocks03", "head"]
+HEAVY = [n for n in NAMES if n.startswith("blocks")]
+TARGET = (("embed", "blocks00"), ("blocks01",), ("blocks02",),
+          ("blocks03", "head"))
+
+
+def test_enumerate_fusions_excludes_heavy_pairs():
+    cands = enumerate_fusions(NAMES, heavy=HEAVY)
+    assert (tuple((n,) for n in NAMES)) in cands
+    assert TARGET in cands
+    for cand in cands:
+        for g in cand:
+            assert sum(1 for n in g if n in HEAVY) <= 1
+
+
+def test_auto_fusion_uniform_picks_endpoint_fusion():
+    """No measurements: the score reduces to dispatch-count minimization
+    under the structural rules, which uniquely fuses the endpoints."""
+    sc = auto_fusion(NAMES, heavy=HEAVY, dev_in_score=False)
+    assert sc.groups == TARGET and sc.fused
+
+
+def test_auto_fusion_measured_picks_endpoint_fusion():
+    host = {"embed": 344.0, "blocks00": 691.0, "blocks01": 616.0,
+            "blocks02": 539.0, "blocks03": 776.0, "head": 397.0}
+    dev = {n: 2.7 if n.startswith("blocks") else 2.5 for n in NAMES}
+    sc = auto_fusion(NAMES, host_us=host, dev_us=dev, heavy=HEAVY)
+    assert sc.groups == TARGET
+    unfused = score_fusion(tuple((n,) for n in NAMES), host_us=host,
+                           dev_us=dev)
+    assert sc.period_us < unfused.period_us
+    assert sc.host_us < unfused.host_us     # two dispatches deleted
+
+
+def test_auto_fusion_fixed_point_with_fused_keys():
+    """Re-scoring with measurements keyed by the fused stage names keeps
+    the same winner (members inherit their group's dispatch cost)."""
+    host = {"embed+blocks00": 700.0, "blocks01": 616.0, "blocks02": 539.0,
+            "blocks03+head": 780.0}
+    dev = {n: 2.7 if n.startswith("blocks") else 2.5 for n in NAMES}
+    sc = auto_fusion(NAMES, host_us=host, dev_us=dev, heavy=HEAVY)
+    assert sc.groups == TARGET
+
+
+def test_auto_fusion_respects_replica_mismatch():
+    reps = {n: 1 for n in NAMES}
+    reps["blocks00"] = 2                    # embed can't join blocks00
+    sc = auto_fusion(NAMES, heavy=HEAVY, replicas=reps, dev_in_score=False)
+    for g in sc.groups:
+        assert "embed" not in g or len(g) == 1 or "blocks00" not in g
+
+
+def test_plan_fusion_on_real_plan():
+    shape, plan, _, _ = _lm_setup()
+    sc = planner.plan_fusion(tiny, shape, plan)
+    assert sc.groups == TARGET
+    host = {"embed": 344.0, "blocks00": 691.0, "blocks01": 616.0,
+            "blocks02": 539.0, "blocks03": 776.0, "head": 397.0}
+    sc2 = planner.plan_fusion(tiny, shape, plan, host_us=host)
+    assert sc2.groups == TARGET
+
+
+def test_replan_reports_fusion_groups():
+    shape, plan, _, _ = _lm_setup()
+    host = {"embed": 344.0, "blocks00": 691.0, "blocks01": 616.0,
+            "blocks02": 539.0, "blocks03": 776.0, "head": 397.0}
+    new, diff = planner.replan(tiny, shape, plan, new_chips=8,
+                               fusion_host_us=host)
+    assert diff["fusion_groups"] == TARGET

@@ -14,7 +14,12 @@ diffing three metric families:
     (``per_stage_us``, ``per_stage_host_us``, ``per_stage_stall_ms``,
     ``per_stage_starve_ms`` … dicts) — lower is better; warns like
     bubble, as do the serving SLO percentiles (``ttft_p95_ms``,
-    ``token_gap_p99_ms``, …) the traced bench_serve replay emits.
+    ``token_gap_p99_ms``, …) the traced bench_serve replay emits.  The
+    SUM of ``per_stage_host_us`` is diffed too (``per_stage_host_us[sum]``)
+    so total-dispatch creep spread across stages is visible even when
+    every stage stays inside tolerance; the fused serve A/B row
+    (backend ``pipelined-fused``) gates its tokens/s like any rate metric
+    and warns on a shrinking ``speedup_vs_unfused``.
 
 Wall-clock rates are host-dependent: a committed baseline is only
 comparable on a similar host, which is why the PR-CI gate REGENERATES
@@ -66,10 +71,24 @@ SOFT_METRICS = {                      # regressions WARN (fail with --strict)
     # assertion is ever relaxed) — warn-only, recovery time is host noise
     "recovery_ms": "down",
     "tokens_lost": "down",
+    # fused-vs-unfused serve A/B (bench_serve backend "pipelined-fused"):
+    # the fusion win itself, tracked so a shrinking speedup warns even
+    # while absolute tokens/s stays inside tolerance
+    "speedup_vs_unfused": "up",
 }
 DICT_METRICS = ("per_stage_us", "per_stage_host_us",   # down, soft
                 "per_stage_stall_ms", "per_stage_starve_ms",
                 "per_stage_stall_cycles", "per_stage_starve_cycles")
+# dict metrics whose SUM is also diffed as a first-class warn metric
+# (``metric[sum]``): total host dispatch per token is the quantity stage
+# fusion optimises, and creep spread over many stages can hide inside
+# per-stage tolerance while the total quietly regresses
+SUM_METRICS = ("per_stage_host_us",)
+
+
+def _finite(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and v == v and abs(v) != float("inf")
 
 
 def _row_key(row: dict) -> tuple:
@@ -138,6 +157,12 @@ def compare_dirs(baseline_dir: str, new_dir: str, tolerance: float,
                     for stage in sorted(set(bd) & set(nd)):
                         check(name, key, f"{metric}[{stage}]", "down",
                               bd[stage], nd[stage], hard=False)
+                    if metric in SUM_METRICS:
+                        bs = [v for v in bd.values() if _finite(v)]
+                        ns = [v for v in nd.values() if _finite(v)]
+                        if bs and ns:
+                            check(name, key, f"{metric}[sum]", "down",
+                                  sum(bs), sum(ns), hard=False)
     if verbose:
         for line in compared:
             print(f"  {line}")
