@@ -19,6 +19,12 @@ to the single-device backend under greedy sampling.
 runtime tracer and exports a Chrome-trace JSON — open it in Perfetto or
 chrome://tracing to see one lane per (stage, replica), wait spans
 annotated with the blamed FIFO, and FIFO-occupancy counter tracks.
+
+``--lint-only`` builds the same pipelined plan, runs the static verifier
+(`core.verify.verify_decode_plan` — channel/cycle credits, fusion
+legality, placement consistency, cache-donation avals), prints the full
+verification report, and exits without serving — exit status 1 on any
+ERROR finding.
 """
 import sys
 
@@ -34,7 +40,8 @@ from repro.core import planner
 from repro.runtime.server import LMServer, Request
 
 
-def main(pipeline: bool = False, trace_path: str | None = None):
+def main(pipeline: bool = False, trace_path: str | None = None,
+         lint_only: bool = False):
     arch = "qwen2.5-3b"
     cfg_full = get_config(arch)
 
@@ -53,7 +60,7 @@ def main(pipeline: bool = False, trace_path: str | None = None):
                     max_new=16)
             for i in range(12)]
     pipe = None
-    if pipeline:
+    if pipeline or lint_only:
         from repro.graphs import lm_graph
         from repro.runtime.pipeline import DecodePipeline
 
@@ -61,10 +68,28 @@ def main(pipeline: bool = False, trace_path: str | None = None):
         shape = ShapeCfg("decode_smoke", 64, 16, "decode")
         small = planner.plan(cfg, shape, chips=8, max_tp=4)
         stg, _ = lm_graph.build_stg(cfg, shape, max_tp=4)
-        pipe = DecodePipeline(cfg, stg, small)
+        pipe = DecodePipeline(cfg, stg, small, warmup=not lint_only)
         print("pipelined backend:")
         print(pipe.placement.summary())
         print()
+    if lint_only:
+        from repro.core import verify
+        from repro.models import blocks
+        from repro.runtime.server import _bucket
+
+        # the same plan tuple the serve below would preflight: 12
+        # requests grouped max_batch=4 at a time
+        shapes = []
+        for lo in range(0, len(reqs), 4):
+            chunk = reqs[lo:lo + 4]
+            bucket = _bucket(max(len(r.prompt) for r in chunk))
+            cap = blocks.attn_cache_capacity(
+                cfg, bucket + max(r.max_new for r in chunk))
+            shapes.append((len(chunk), bucket, cap))
+        report = verify.verify_decode_plan(
+            pipe, n_groups=len(shapes), group_shapes=shapes)
+        print(report.render())
+        sys.exit(0 if report.ok() else 1)
     tracer = None
     if trace_path is not None:
         if pipe is None:
@@ -88,4 +113,5 @@ def main(pipeline: bool = False, trace_path: str | None = None):
 if __name__ == "__main__":
     args = sys.argv[1:]
     trace = args[args.index("--trace") + 1] if "--trace" in args else None
-    main(pipeline="--pipeline" in args, trace_path=trace)
+    main(pipeline="--pipeline" in args, trace_path=trace,
+         lint_only="--lint-only" in args)

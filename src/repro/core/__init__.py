@@ -5,3 +5,6 @@ from .restructure import (FusionScore, RestructuredGraph, auto_fusion,  # noqa: 
                           combine, enumerate_fusions, score_fusion, split,
                           validate_restructure)
 from .stg import STG, Channel, Impl, Node, Selection  # noqa: F401
+from .verify import (ERROR, WARN, EdgeSpec, Finding,  # noqa: F401
+                     PlanVerificationError, VerificationReport,
+                     verify_decode_plan, verify_graph, verify_lm_plan)

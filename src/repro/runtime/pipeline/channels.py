@@ -48,6 +48,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
+from math import gcd
 
 
 def check_not_donated(leaf, context: str) -> None:
@@ -272,12 +273,18 @@ class ChannelSet:
     def for_graph(cls, stg, capacity_blocks: int = 2) -> "ChannelSet":
         cs = cls()
         for ch in stg.channels:
-            block = stg.nodes[ch.dst].in_rates[ch.dst_port]
-            out_rate = stg.nodes[ch.src].out_rates[ch.src_port]
+            block = max(1, stg.nodes[ch.dst].in_rates[ch.dst_port])
+            out_rate = max(1, stg.nodes[ch.src].out_rates[ch.src_port])
+            # multirate floors: capacity_blocks bursts of the larger side,
+            # and never below the two-actor SDF liveness bound
+            # block + burst - gcd(block, burst) — below it a rate-changing
+            # edge wedges with the producer short of free slots and the
+            # consumer short of a full block (core.verify proves this
+            # statically; capacity_blocks=1 used to violate it)
+            floor = block + out_rate - gcd(block, out_rate)
             cs.fifos[ch.key()] = Fifo(
-                block=max(1, block), capacity_blocks=capacity_blocks,
-                # multirate: hold capacity_blocks bursts of the larger side
-                min_capacity=max(1, out_rate) * capacity_blocks)
+                block=block, capacity_blocks=capacity_blocks,
+                min_capacity=max(out_rate * capacity_blocks, floor))
         return cs
 
     def __getitem__(self, key: tuple) -> Fifo:

@@ -522,7 +522,8 @@ class _ServeRun:
                  eos_id: int, capacity_blocks: int, overlap: bool,
                  temperature: float | None = None,
                  pause_at: int | None = None,
-                 open_groups: int | None = None):
+                 open_groups: int | None = None,
+                 feedback_capacity: int | None = None):
         self.pipe = pipe
         self.groups = groups
         self.eos_id = eos_id
@@ -540,8 +541,13 @@ class _ServeRun:
         # the continuous token stream: head -> embed feedback.  At most
         # one token per live group is ever in flight (a group's next op
         # consumes it before its next push), so n_groups slots suffice.
+        # The head pushes here *unconditionally* at retirement, which is
+        # why `verify_decode_plan` requires capacity >= n_groups — an
+        # override below that statically fails preflight.
+        fb_cap = feedback_capacity if feedback_capacity is not None \
+            else max(2, len(groups))
         self.feedback = StreamChannel(block=1, capacity_blocks=1,
-                                      min_capacity=max(2, len(groups)))
+                                      min_capacity=fb_cap)
         self.open_groups = len(groups) if open_groups is None else open_groups
 
     def enqueue(self, kind: str, gid: int, pos: int) -> int:
@@ -664,6 +670,8 @@ class DecodePipeline:
                 f"decoder pipelines only (enc-dec / multimodal frontends "
                 f"are a ROADMAP item)")
         self.cfg = cfg
+        self.stg = stg                 # kept for static verification
+        self.sel = sel                 # (core.verify.verify_decode_plan)
         self.overlap = overlap
         self.replica_queue = max(1, replica_queue)
         self.workers = workers
@@ -1022,7 +1030,9 @@ class DecodePipeline:
               overlap: bool | None = None,
               temperature: float | None = None,
               tracer=None, injector=None, health=None,
-              pause_after_tokens: int | None = None) -> ServeRunResult:
+              pause_after_tokens: int | None = None,
+              preflight: bool = True,
+              feedback_capacity: int | None = None) -> ServeRunResult:
         """Serve ``prompts`` in ``group_size`` slot groups streamed
         concurrently through the pipeline.  Grouping, bucketing, and
         EOS/budget bookkeeping mirror `LMServer.serve_round` on each
@@ -1039,7 +1049,16 @@ class DecodePipeline:
         many decode steps park instead of scheduling further work; the
         returned result has ``paused=True`` and a ``resume_state`` that
         `resume()` (on this or a rescaled pipeline) continues without
-        dropping any in-flight request."""
+        dropping any in-flight request.  ``preflight``: run the static
+        plan verifier (`core.verify.verify_decode_plan`) before
+        launching — channel/cycle credits, fusion legality, placement
+        consistency, cache-donation avals — raising
+        `PlanVerificationError` on any ERROR (False = escape hatch for
+        deliberately unsafe experiments; the deadlock report will note
+        preflight was skipped).  ``feedback_capacity``: override the
+        head->embed stream's capacity (default ``max(2, n_groups)``) —
+        mainly for demonstrating that an undersized feedback path is
+        rejected statically."""
         if not prompts:
             raise ValueError("serve() needs at least one prompt")
         overlap = self.overlap if overlap is None else overlap
@@ -1068,6 +1087,13 @@ class DecodePipeline:
                 budget=budgets, out_tokens=[None] * len(chunk)))
             group_of.extend([gid] * len(chunk))
 
+        report = None
+        if preflight:
+            report = self._preflight(
+                n_groups=len(groups), capacity_blocks=capacity_blocks,
+                feedback_capacity=feedback_capacity,
+                group_shapes=[(g.batch, g.bucket, g.cap) for g in groups])
+
         if self.warmup:
             for g in groups:
                 self._warm_group_shape(g.batch, g.bucket, g.cap)
@@ -1075,18 +1101,39 @@ class DecodePipeline:
         run = _ServeRun(self, groups, eos_id=eos_id,
                         capacity_blocks=capacity_blocks, overlap=overlap,
                         temperature=temperature,
-                        pause_at=pause_after_tokens)
+                        pause_at=pause_after_tokens,
+                        feedback_capacity=feedback_capacity)
         for g in groups:
             run.enqueue("P", g.gid, 0)
         res, engine = self._launch(run, group_of, overlap=overlap,
                                    tracer=tracer, injector=injector,
-                                   health=health)
+                                   health=health, static_report=report)
         for g in groups:                       # run-relative group timings
             g.t_start = max(0.0, g.t_start - engine.t0)
         return res
 
+    def _preflight(self, *, n_groups: int, capacity_blocks: int,
+                   feedback_capacity: int | None, group_shapes):
+        """Static verification of this serve's plan tuple; raises
+        `core.verify.PlanVerificationError` on any ERROR and caches the
+        accepted report (donation avals don't change per serve) on
+        ``self.last_preflight``."""
+        from ...core import verify as _verify
+        key = (n_groups, capacity_blocks, feedback_capacity,
+               frozenset(group_shapes))
+        cached = getattr(self, "_preflight_cache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1].raise_if_errors("DecodePipeline.serve")
+        report = _verify.verify_decode_plan(
+            self, n_groups=n_groups, capacity_blocks=capacity_blocks,
+            feedback_capacity=feedback_capacity, group_shapes=group_shapes)
+        self._preflight_cache = (key, report)
+        self.last_preflight = report
+        return report.raise_if_errors("DecodePipeline.serve")
+
     def _launch(self, run: "_ServeRun", group_of: list, *, overlap: bool,
-                tracer, injector, health) -> tuple[ServeRunResult, Engine]:
+                tracer, injector, health,
+                static_report=None) -> tuple[ServeRunResult, Engine]:
         """Wire channels, drive the engine to quiescence, fold the
         engine result into a `ServeRunResult` (exporting a `ResumeState`
         when the run admission-paused) — shared by `serve` and
@@ -1106,7 +1153,8 @@ class DecodePipeline:
                         tracer=tracer, fifos=fifo_map, injector=injector,
                         on_tick=None if health is None else health.tick,
                         tick_every=64 if health is None
-                        else health.check_every)
+                        else health.check_every,
+                        static_report=static_report)
         with self.compile_stats.window():
             er = engine.run()
         assert run.feedback.exhausted, \
@@ -1144,7 +1192,9 @@ class DecodePipeline:
                overlap: bool | None = None,
                temperature: float | None = None, tracer=None,
                injector=None, health=None,
-               pause_after_tokens: int | None = None) -> ServeRunResult:
+               pause_after_tokens: int | None = None,
+               preflight: bool = True,
+               feedback_capacity: int | None = None) -> ServeRunResult:
         """Continue an admission-paused serve on THIS pipeline — possibly
         a different plan, partitioning, or device pool than the one that
         drained (`elastic.rescale_serving` builds that pipeline).  Live
@@ -1158,6 +1208,16 @@ class DecodePipeline:
         live = state.live_groups()
         if not live:
             raise ValueError("resume() on a state with no live groups")
+        report = None
+        if preflight:
+            # the channel is sized for every exported group (finished
+            # ones hold no tokens), but only live groups circulate
+            fb_cap = feedback_capacity if feedback_capacity is not None \
+                else max(2, len(state.groups))
+            report = self._preflight(
+                n_groups=len(live), capacity_blocks=capacity_blocks,
+                feedback_capacity=fb_cap,
+                group_shapes=[(g.batch, g.bucket, g.cap) for g in live])
         if self.warmup:
             for g in live:
                 self._warm_group_shape(g.batch, g.bucket, g.cap)
@@ -1165,7 +1225,8 @@ class DecodePipeline:
                         capacity_blocks=capacity_blocks, overlap=overlap,
                         temperature=temperature,
                         pause_at=pause_after_tokens,
-                        open_groups=len(live))
+                        open_groups=len(live),
+                        feedback_capacity=feedback_capacity)
         S = len(self.stage_names)
         by_span = {tuple(v["span"]): v["caches"]
                    for v in state.stage_caches.values()}
@@ -1191,5 +1252,5 @@ class DecodePipeline:
             run.feedback.push([(seq, (g.gid, g.cur[:, None]))], 0.0)
         res, _engine = self._launch(run, state.group_of, overlap=overlap,
                                     tracer=tracer, injector=injector,
-                                    health=health)
+                                    health=health, static_report=report)
         return res

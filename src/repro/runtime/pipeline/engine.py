@@ -329,7 +329,7 @@ class Engine(Driver):
                  workers: int = 8, replica_queue: int = 2,
                  tracer=None, fifos: dict | None = None,
                  injector=None, on_tick: Callable | None = None,
-                 tick_every: int = 64):
+                 tick_every: int = 64, static_report=None):
         """``tracer``: optional `trace.Tracer` — op spans, wait spans, and
         per-stage stall/starve accounting (off = zero-cost path).
         ``fifos``: {label: Fifo} for the deadlock report's occupancy
@@ -339,10 +339,15 @@ class Engine(Driver):
         failover, a ``stall`` wraps the op body in a host-side sleep.
         ``on_tick(engine)``: optional health hook invoked every
         ``tick_every`` retirements from the scheduler thread (the
-        `HealthController` attachment point)."""
+        `HealthController` attachment point).  ``static_report``: the
+        `core.verify.VerificationReport` this run was preflighted with
+        (None = preflight skipped) — a runtime deadlock cross-references
+        it so the report says whether the wedge matches a static finding
+        or the plan was proven deadlock-free."""
         super().__init__(tracer)
         self.programs = list(programs)
         self.fifos = dict(fifos or {})
+        self.static_report = static_report
         self.overlap = overlap
         self.workers = max(1, workers)
         self.replica_queue = max(1, replica_queue)
@@ -412,6 +417,9 @@ class Engine(Driver):
             "schedule": [p.describe() for p in self.programs],
             "reorder_occupancy": self.reorder_occupancy(),
             "failovers": list(self.result.failovers),
+            "static_preflight": (self.static_report.summary()
+                                 if self.static_report is not None
+                                 else {"ran": False}),
         }
         if self.tracer is not None:
             bundle["trace_tail"] = [
@@ -499,7 +507,31 @@ class Engine(Driver):
                     lines.append(f"last events {p.name}: " + "; ".join(
                         f"{e.kind} {e.name}{e.seq if e.seq >= 0 else ''}"
                         f"@{e.t:.4g}" for e in tail))
+        lines.extend(self._static_crossref())
         return "".join("\n  " + ln for ln in lines)
+
+    def _static_crossref(self) -> list[str]:
+        """Tie the runtime wedge back to the static analysis: either the
+        plan skipped preflight (say so — the wedge may be a statically
+        catchable sizing bug), or a static finding already predicted a
+        deadlock on some edge (name it), or the plan was verified
+        deadlock-free (so suspect the executor, a fault injection, or an
+        external stall, not the plan)."""
+        rep = self.static_report
+        if rep is None:
+            return ["static preflight: not run for this drive — "
+                    "rerun with preflight=True (or tools/stg_lint.py) "
+                    "to check whether this wedge is statically provable"]
+        hits = rep.deadlock_findings()
+        if hits:
+            out = ["static preflight: runtime wedge matches "
+                   f"{len(hits)} static finding(s):"]
+            out += ["  " + f.describe() for f in hits[:4]]
+            return out
+        return ["static preflight: plan was verified deadlock-free "
+                f"(checks: {', '.join(rep.checks)}) — suspect an "
+                "executor bug, fault injection, or external stall, "
+                "not the plan's channel sizing"]
 
     @staticmethod
     def _timed(fn, args):

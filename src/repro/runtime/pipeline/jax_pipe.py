@@ -547,6 +547,8 @@ class LMPipeline:
                  fusion_plan=None):
         self.cfg = cfg
         self.schedule = schedule
+        self.stg = stg                 # kept for static verification
+        self.sel = sel                 # (core.verify.verify_lm_plan)
         devices = list(devices if devices is not None else jax.devices())
         names, fwds, init_params = build_lm_stages(
             cfg, layers_per_stage=layers_per_stage, seed=seed)
@@ -787,6 +789,25 @@ class LMPipeline:
                 f" — mismatched with train={train}")
         return schedule.validate()
 
+    def _preflight(self, sched: Schedule, n_micro: int, train: bool,
+                   act_caps: list, grd_caps: list):
+        """Static verification of this run's plan tuple; raises
+        `core.verify.PlanVerificationError` on any ERROR.  Cached per
+        (schedule, shape, capacities) — steady-state reruns of the same
+        plan pay a dict lookup, not a re-simulation."""
+        from ...core import verify as _verify
+        key = (id(sched), sched.name, n_micro, train,
+               tuple(act_caps), tuple(grd_caps))
+        cached = getattr(self, "_preflight_cache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1].raise_if_errors("LMPipeline.run")
+        report = _verify.verify_lm_plan(
+            self, schedule=sched, n_micro=n_micro, train=train,
+            act_capacities=act_caps, grd_capacities=grd_caps)
+        self._preflight_cache = (key, report)
+        self.last_preflight = report
+        return report.raise_if_errors("LMPipeline.run")
+
     def _warm_run(self, mb, train: bool, loss_fn) -> None:
         """Ensure every program this run's shape will execute is compiled
         BEFORE the engine's clock starts (the ``warmup=`` escape hatch
@@ -858,7 +879,8 @@ class LMPipeline:
     def run(self, microbatches: list, *, train: bool = False,
             loss_fn=None, overlap: bool | None = None,
             schedule: Schedule | None = None,
-            tracer=None, injector=None) -> LMPipelineResult:
+            tracer=None, injector=None,
+            preflight: bool = True) -> LMPipelineResult:
         """Stream microbatches through the pipeline under ``schedule``.
 
         Serving (train=False) defaults to `schedule.fill_drain` streaming
@@ -875,7 +897,13 @@ class LMPipeline:
         optional `trace.Tracer` — the run emits dispatch/retire spans,
         credit/starve waits, and fifo occupancy counters, and fills
         ``res.stage_wait_s``; warmup stays untraced so the aggregates
-        cover only the timed window.
+        cover only the timed window.  ``preflight``: run the static plan
+        verifier (`core.verify.verify_lm_plan`) over the resolved
+        schedule and the actual act/grd FIFO capacities before building
+        the engine — schedule-consistency plus an exact credit
+        simulation of the op order — raising `PlanVerificationError` on
+        any ERROR (False = escape hatch; the deadlock report then notes
+        preflight was skipped).
         """
         overlap = self.overlap if overlap is None else overlap
         n_micro = len(microbatches)
@@ -889,6 +917,11 @@ class LMPipeline:
                 for i in range(M - 1)]             # i -> i+1 activations
         grds = [self._edge_fifo(self.stages[i + 1], self.stages[i], overlap)
                 for i in range(M - 1)] if train else None
+        report = None
+        if preflight:
+            report = self._preflight(sched, n_micro, train,
+                                     [f.capacity for f in acts],
+                                     [f.capacity for f in grds or []])
         fifo_map = {}
         for i in range(M - 1):
             fifo_map[f"act{i}"] = acts[i]
@@ -920,7 +953,8 @@ class LMPipeline:
         engine = Engine(programs, overlap=overlap,
                         workers=self._n_workers(),
                         replica_queue=self.replica_queue,
-                        tracer=tracer, fifos=fifo_map, injector=injector)
+                        tracer=tracer, fifos=fifo_map, injector=injector,
+                        static_report=report)
         with self.compile_stats.window():
             er = engine.run()
         res.stage_wait_s = er.stage_wait_s

@@ -95,20 +95,25 @@ class LMServer:
     def __init__(self, cfg: ModelConfig, *, max_batch: int = 8,
                  eos_id: int = 1, params=None, seed: int = 0,
                  mesh=None, temperature: float = 0.0, pipeline=None,
-                 tracer=None, injector=None, health=None):
+                 tracer=None, injector=None, health=None,
+                 preflight: bool = True):
         """``pipeline``: a `runtime.pipeline.DecodePipeline` — when set,
         ``serve``/``serve_round`` stream request groups through it instead
         of the single-device prefill/decode loop.  Build it with the same
         ``seed`` (or pass the server's ``params``) for token parity.
         ``injector`` (a `failures.ReplicaFaultPlan`) and ``health`` (a
         `pipeline.health.HealthController`) ride along on every pipelined
-        serve — chaos drills and self-healing, pipelined backend only."""
+        serve — chaos drills and self-healing, pipelined backend only.
+        ``preflight``: statically verify each pipelined serve's plan
+        (`core.verify`) before launch; False skips the check (the
+        single-device backend has no plan to verify either way)."""
         self.cfg = cfg
         self.max_batch = max_batch
         self.eos_id = eos_id
         self.temperature = temperature
         self.mesh = mesh
         self.pipeline = pipeline
+        self.preflight = preflight
         self.tracer = tracer         # optional pipeline Tracer (pipelined
         #                              backend only; None = tracing off)
         self.injector = injector     # optional ReplicaFaultPlan (chaos)
@@ -218,7 +223,8 @@ class LMServer:
             [r.prompt for r in reqs], [r.max_new for r in reqs],
             eos_id=self.eos_id, group_size=self.max_batch,
             temperature=self.temperature, tracer=self.tracer,
-            injector=self.injector, health=self.health)
+            injector=self.injector, health=self.health,
+            preflight=self.preflight)
         self.stats.requests += len(reqs)
         self.stats.rounds += len(run.groups)
         self.stats.slo = run.slo()

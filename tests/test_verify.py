@@ -1,0 +1,397 @@
+"""Static plan verifier (`core.verify`) — the PR 9 acceptance contract:
+
+  * the channel-capacity checker agrees exactly with a brute-force
+    producer/consumer simulation on every (block, burst, capacity)
+    triple — the SDF liveness bound is neither optimistic nor
+    pessimistic;
+  * every committed example graph, schedule, and fusion plan is
+    accepted; any plan the verifier accepts runs to completion on the
+    virtual-clock driver;
+  * a decode plan whose feedback-path FIFO is one credit too small is
+    rejected *statically*, naming the exact cycle and the minimum
+    viable capacity — a plan that previously only failed via runtime
+    deadlock diagnostics;
+  * rate-changing channels (the jpeg-style MCU edge) are floored at the
+    liveness bound by `ChannelSet.for_graph`;
+  * donation findings come from `jax.eval_shape`, not runtime errors;
+  * a runtime deadlock report cross-references the static findings (or
+    says preflight was skipped).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ShapeCfg
+from repro.configs.tiny import CONFIG as tiny
+from repro.core import planner, restructure, verify
+from repro.core.stg import STG, Impl, Node, Selection
+from repro.core.verify import (EdgeSpec, PlanVerificationError,
+                               VerificationReport)
+from repro.graphs import jpeg, lm_graph, nbody, streamit
+from repro.runtime.pipeline import DecodePipeline
+from repro.runtime.pipeline import schedule as sched_mod
+from repro.runtime.pipeline.channels import ChannelSet
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ===========================================================================
+# channel-capacity analysis vs brute force
+# ===========================================================================
+def _bruteforce_gated_deadlocks(block: int, burst: int, cap: int) -> bool:
+    """Greedy two-actor simulation of one gated bounded edge: the
+    producer fires when ``cap - q >= burst``, the consumer when
+    ``q >= block``; wedging before the stream drains is a deadlock."""
+    total = block * burst * 4                  # a few steady-state periods
+    to_produce, to_consume, q = total // burst, total // block, 0
+    while to_produce or to_consume:
+        progressed = False
+        if to_produce and cap - q >= burst:
+            q += burst
+            to_produce -= 1
+            progressed = True
+        if to_consume and q >= block:
+            q -= block
+            to_consume -= 1
+            progressed = True
+        if not progressed:
+            return True
+    return False
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=12))
+def test_channel_bound_matches_bruteforce(block, burst, cap):
+    rep = VerificationReport()
+    verify.check_channel_capacities(
+        [EdgeSpec("p", "c", cap, block=block, burst=burst)], rep)
+    flagged = not rep.ok()
+    assert flagged == _bruteforce_gated_deadlocks(block, burst, cap), \
+        f"block={block} burst={burst} cap={cap}: " \
+        f"checker={'ERROR' if flagged else 'ok'} disagrees with simulation"
+    if flagged:
+        floor = verify.channel_liveness_floor(block, burst)
+        assert rep.errors()[0].min_viable == floor
+        assert not _bruteforce_gated_deadlocks(block, burst, floor)
+
+
+# ===========================================================================
+# committed graphs / plans accepted
+# ===========================================================================
+@pytest.mark.parametrize("build", [jpeg.build_stg, streamit.build_fft,
+                                   streamit.build_filterbank,
+                                   streamit.build_autocor, nbody.build_stg])
+def test_committed_graphs_accepted(build):
+    stg = build()
+    for cb in (1, 2):
+        rep = verify.verify_graph(stg, Selection.fastest(stg),
+                                  capacity_blocks=cb)
+        assert rep.ok(), rep.render()
+
+
+def test_planner_plan_accepted():
+    from repro.runtime.pipeline import as_selection
+    shape = ShapeCfg("verify_plan", 64, 16, "decode")
+    plan = planner.plan(tiny, shape, chips=8, max_tp=4)
+    stg, _ = lm_graph.build_stg(tiny, shape, max_tp=4)
+    rep = verify.verify_graph(stg, as_selection(plan))
+    assert rep.ok(), rep.render()
+
+
+def test_invalid_graph_is_a_finding_not_a_crash():
+    """Rate-inconsistent SDF (no repetition vector exists: the two
+    parallel a->b channels demand q_a*2 == q_b*3 AND q_a == q_b) comes
+    back as a ``graph.invalid`` ERROR, not an exception."""
+    stg = STG()
+    stg.add_node(Node(name="a", impls=(Impl("x", 1, 1),), out_rates=(2, 1)))
+    stg.add_node(Node(name="b", impls=(Impl("x", 1, 1),), in_rates=(3, 1)))
+    stg.connect("a", "b", src_port=0, dst_port=0)
+    stg.connect("a", "b", src_port=1, dst_port=1)
+    rep = verify.verify_graph(stg, Selection.fastest(stg))
+    assert any(f.check == "graph.invalid" for f in rep.errors()), \
+        rep.render()
+
+
+# ===========================================================================
+# rate-changing edges: the ChannelSet liveness floor
+# ===========================================================================
+def _mcu_stg() -> STG:
+    """A jpeg-shaped rate change: camera emits 6-block MCU bursts, dct
+    consumes 4 blocks per firing (the 4:2:0 luma/chroma split)."""
+    stg = STG()
+    stg.add_node(Node(name="camera", impls=(Impl("cam", 1.0, 1),),
+                 out_rates=(6,)))
+    stg.add_node(Node(name="dct", impls=(Impl("dct", 1.0, 1),),
+                 in_rates=(4,)))
+    stg.connect("camera", "dct")
+    return stg
+
+
+def test_rate_changing_channel_floored_at_liveness_bound():
+    stg = _mcu_stg()
+    cs = ChannelSet.for_graph(stg, capacity_blocks=1)
+    fifo = cs[stg.channels[0].key()]
+    floor = verify.channel_liveness_floor(4, 6)     # 4 + 6 - gcd = 8
+    assert fifo.capacity >= floor, \
+        f"cb=1 sizing {fifo.capacity} is below the liveness bound {floor}"
+    rep = verify.verify_graph(stg, Selection.fastest(stg),
+                              capacity_blocks=1)
+    assert not [f for f in rep.errors()
+                if f.check.startswith("channel.")], rep.render()
+    # an explicitly undersized edge IS flagged, with the exact fix
+    rep2 = VerificationReport()
+    verify.check_channel_capacities(
+        [EdgeSpec("camera", "dct", floor - 1, block=4, burst=6)], rep2)
+    assert rep2.errors() and rep2.errors()[0].min_viable == floor
+
+
+# ===========================================================================
+# decode feedback cycle: static rejection end to end
+# ===========================================================================
+@pytest.fixture(scope="module")
+def decode_setup():
+    shape = ShapeCfg("verify_decode", 64, 16, "decode")
+    plan = planner.plan(tiny, shape, chips=8, max_tp=4)
+    stg, _ = lm_graph.build_stg(tiny, shape, max_tp=4)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, tiny.vocab, rng.integers(4, 20)).tolist()
+               for _ in range(8)]
+    pipe = DecodePipeline(tiny, stg, plan)
+    return pipe, prompts
+
+
+def test_undersized_feedback_rejected_statically(decode_setup):
+    """The acceptance bug: one feedback credit short of the live-group
+    count used to surface only as a runtime deadlock/overflow.  Now the
+    plan is rejected before any op dispatches, naming the cycle, the
+    edge, and the minimum viable capacity."""
+    pipe, prompts = decode_setup
+    with pytest.raises(PlanVerificationError) as ei:
+        pipe.serve(prompts, 4, group_size=4, feedback_capacity=1)
+    msg = str(ei.value)
+    assert "feedback" in msg and "cycle" in msg
+    assert "embed" in msg and "head" in msg       # the exact cycle named
+    findings = ei.value.findings
+    assert any(f.check == "deadlock.feedback-capacity"
+               and f.min_viable == 2 for f in findings), findings
+    # exactly enough credits is accepted and serves
+    res = pipe.serve(prompts, 3, group_size=4, feedback_capacity=2)
+    assert all(len(t) == 3 for t in res.tokens)
+
+
+def test_default_serve_passes_preflight(decode_setup):
+    pipe, prompts = decode_setup
+    res = pipe.serve(prompts, 3, group_size=4)
+    assert all(len(t) == 3 for t in res.tokens)
+    assert pipe.last_preflight.ok(), pipe.last_preflight.render()
+    assert "donation-cache-contract" in pipe.last_preflight.checks
+
+
+def test_preflight_escape_hatch(decode_setup):
+    pipe, prompts = decode_setup
+    ref = pipe.serve(prompts, 3, group_size=4)
+    res = pipe.serve(prompts, 3, group_size=4, preflight=False)
+    assert res.tokens == ref.tokens
+
+
+@settings(max_examples=20)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=2, max_value=5))
+def test_undersized_feedback_always_flagged(n_groups, fb_cap, n_stages):
+    """Property: the pure analysis flags an undersized feedback stream
+    iff capacity < n_groups, always naming the feedback edge and the
+    minimum viable capacity (== n_groups)."""
+    names = [f"s{i}" for i in range(n_stages)]
+    edges = [EdgeSpec(names[i], names[i + 1], 4, label=f"act{i}")
+             for i in range(n_stages - 1)]
+    edges.append(EdgeSpec(names[-1], names[0], fb_cap, label="feedback",
+                          gated=False))
+    rep = VerificationReport()
+    verify.check_cycles(edges, n_groups, rep)
+    undersized = [f for f in rep.errors()
+                  if f.check == "deadlock.feedback-capacity"]
+    if fb_cap < n_groups:
+        assert undersized, f"cap {fb_cap} < {n_groups} groups not flagged"
+        assert "feedback" in undersized[0].subject
+        assert undersized[0].min_viable == n_groups
+    else:
+        assert not undersized, rep.render()
+
+
+# ===========================================================================
+# schedules: verifier acceptance == virtual-clock completion
+# ===========================================================================
+_SCHEDULES = [sched_mod.fill_drain(2, 4), sched_mod.fill_drain(4, 8),
+              sched_mod.one_f_one_b(2, 4), sched_mod.one_f_one_b(4, 8),
+              sched_mod.interleaved_1f1b(2, 4, 2)]
+
+
+@settings(max_examples=15)
+@given(st.sampled_from(_SCHEDULES),
+       st.integers(min_value=1, max_value=3))
+def test_accepted_schedule_completes_on_virtual_clock(schedule, cb):
+    """Any (schedule, capacity) pair the credit simulation accepts runs
+    to completion on the virtual-clock driver; any it rejects wedges
+    there.  `schedule_programs` builds cap-``cb`` FIFOs per edge —
+    exactly the capacities handed to the verifier."""
+    M = schedule.n_model_stages
+    caps = [cb] * (M - 1)
+    rep = VerificationReport()
+    verify.verify_schedule_credits(
+        schedule, caps, caps if schedule.trains else [], rep)
+    if rep.ok():
+        # simulate_schedule raises if the schedule wedges — acceptance
+        # means this completes
+        run = sched_mod.simulate_schedule(schedule, f_cost=1.0,
+                                          capacity_blocks=cb)
+        assert run.makespan > 0
+    else:
+        with pytest.raises(RuntimeError):
+            sched_mod.simulate_schedule(schedule, f_cost=1.0,
+                                        capacity_blocks=cb)
+
+
+def test_schedule_consistency_findings():
+    sched = sched_mod.fill_drain(4, 8)
+    rep = VerificationReport()
+    verify.verify_schedule_consistency(sched, n_stages_built=3, n_micro=8,
+                                       train=False, report=rep)
+    assert any(f.check == "plan.schedule-shape" for f in rep.errors())
+    rep2 = VerificationReport()
+    verify.verify_schedule_consistency(sched, n_stages_built=4, n_micro=6,
+                                       train=True, report=rep2)
+    checks = {f.check for f in rep2.errors()}
+    assert "plan.schedule-micro" in checks
+    assert "plan.schedule-train" in checks
+
+
+def test_credit_wedge_names_cycle_and_fix():
+    """A burst-2 producer into a capacity-1 edge: the producer has no
+    credits, the consumer starves — a genuine wait-for cycle.  The wedge
+    report names both blockers, the cycle, and the exact capacity bump
+    (2) that lets the same op order complete."""
+    ops = [
+        [verify.SimOp("a0", pushes=((0, 2),))],
+        [verify.SimOp("b0", pops=((0, 1),)),
+         verify.SimOp("b1", pops=((0, 1),))],
+    ]
+    wedge = verify.simulate_credit_schedule(ops, [1])
+    assert wedge is not None
+    reasons = {(r, ei) for _s, _l, r, ei in wedge.blockers}
+    assert ("no credits", 0) in reasons and ("starved", 0) in reasons
+    assert wedge.cycle, "wait-for cycle missing from the wedge report"
+    assert wedge.min_viable == {0: 2}
+    text = wedge.describe(["e0"])
+    assert "no credits" in text and "e0>=2" in text
+    # and the bump it names is real: capacity 2 completes
+    assert verify.simulate_credit_schedule(ops, [2]) is None
+
+
+# ===========================================================================
+# fusion legality
+# ===========================================================================
+def test_fusion_legality_matches_enumerate_fusions():
+    names = ["a", "b", "c", "d"]
+    heavy = ("b", "c")
+    legal = set(restructure.enumerate_fusions(names, heavy=heavy))
+    for groups in restructure.enumerate_fusions(names):
+        rep = VerificationReport()
+        verify.verify_fusion(names, groups, heavy=heavy, report=rep)
+        assert rep.ok() == (groups in legal), \
+            f"{groups}: verifier and enumerate_fusions disagree"
+    # a non-partition is rejected outright
+    rep = VerificationReport()
+    verify.verify_fusion(names, [("a", "c"), ("b", "d")], heavy=heavy,
+                         report=rep)
+    assert any(f.check == "plan.fusion-partition" for f in rep.errors())
+
+
+def test_graph_fusion_roundtrip_on_jpeg():
+    stg = jpeg.build_stg()
+    sel = Selection.fastest(stg)
+    compute = [n for n in stg.topo_order()
+               if stg.nodes[n].kind == "compute"]
+    for groups in restructure.enumerate_fusions(compute, max_group=3):
+        rep = VerificationReport()
+        verify.verify_graph_fusion(stg, sel, groups, rep)
+        assert rep.ok(), rep.render()
+
+
+# ===========================================================================
+# donation / aliasing
+# ===========================================================================
+def test_donation_unmatched_leaves_flags_dtype_change():
+    import jax
+    import jax.numpy as jnp
+    aval = {"kv": jax.ShapeDtypeStruct((2, 8), jnp.float32)}
+
+    def good(cache, x):
+        return {"kv": cache["kv"] + x}, x
+
+    def bad(cache, x):
+        # no output has the donated leaf's (shape, dtype) — the donated
+        # f32 buffer cannot be reused anywhere
+        return {"kv": cache["kv"].astype(jnp.bfloat16)}, x.sum()
+
+    x = jax.ShapeDtypeStruct((2, 8), jnp.float32)
+    assert verify.donation_unmatched_leaves(good, (0,), aval, x) == []
+    leaks = verify.donation_unmatched_leaves(bad, (0,), aval, x)
+    assert leaks and "float32" in leaks[0]
+
+
+def test_decode_cache_contract_on_tiny():
+    import jax
+
+    from repro.models import lm
+    params = lm.init_params(tiny, jax.random.PRNGKey(0))
+    stacked = lm.slice_periods(params["layers"], 0, tiny.n_periods)
+    rep = VerificationReport()
+    verify.verify_decode_cache_contract(tiny, stacked, batch=2, prompt=16,
+                                        cap=24, stage="blocks00",
+                                        report=rep)
+    assert rep.ok(), rep.render()
+
+
+# ===========================================================================
+# runtime deadlock report cross-references the static analysis
+# ===========================================================================
+def test_deadlock_detail_crossref():
+    from repro.runtime.pipeline.engine import Engine
+    eng = Engine([], static_report=None)
+    detail = eng._deadlock_detail()
+    assert "preflight: not run" in detail
+    assert eng.diagnostic_bundle()["static_preflight"] == {"ran": False}
+
+    clean = VerificationReport(plan="p")
+    clean.ran("cycle-credits")
+    eng2 = Engine([], static_report=clean)
+    assert "verified deadlock-free" in eng2._deadlock_detail()
+    assert eng2.diagnostic_bundle()["static_preflight"]["plan"] == "p"
+
+    dirty = VerificationReport(plan="p")
+    dirty.add(verify.ERROR, "deadlock.feedback-capacity", "feedback",
+              "short", min_viable=4)
+    eng3 = Engine([], static_report=dirty)
+    d3 = eng3._deadlock_detail()
+    assert "matches" in d3 and "feedback" in d3
+
+
+# ===========================================================================
+# the CI lint gate
+# ===========================================================================
+def test_stg_lint_cli_fast():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "stg_lint.py"),
+         "--fast"], capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 error(s)" in proc.stdout

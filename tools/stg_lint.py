@@ -1,0 +1,192 @@
+#!/usr/bin/env python
+"""stg-lint: run the static plan verifier over every committed example
+graph, planner plan, schedule, and fusion plan — the CI gate that keeps
+`core.verify`'s guarantees in sync with the code.
+
+What it lints (all device-free):
+
+  * **example graphs** — jpeg, StreamIt fft/filterbank/autocor, nbody:
+    structural validity, selection coverage, and channel-capacity
+    analysis under the real `ChannelSet.for_graph` sizing at
+    capacity_blocks 1 and 2 (cb=1 is where rate-changing edges used to
+    sit below the SDF liveness floor);
+  * **config plans** — every registry arch x runnable shape: build the
+    lm STG, run the planner, and verify the resulting (STG, Selection)
+    pair;
+  * **schedules** — fill-drain / 1F1B / interleaved 1F1B over a sweep of
+    (stages, micro, chunks): the exact credit simulation of each op
+    order against the default FIFO capacities;
+  * **decode feedback sizing** — the head->embed cycle with the
+    executor's default ``max(2, n_groups)`` stream capacity for 1..8
+    groups;
+  * **fusion plans** — `enumerate_fusions` over the jpeg chain and the
+    tiny lm chain, each group applied via `restructure.combine` +
+    `validate_restructure`.
+
+Exit status 1 iff any ERROR finding (CI fails); WARNs print but pass.
+``--fast`` lints a small subset (the test-suite smoke), ``-v`` prints
+every report instead of only failing ones.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import restructure, verify  # noqa: E402
+from repro.core.stg import Selection  # noqa: E402
+
+
+def _lint(title: str, report, results: list, verbose: bool) -> None:
+    results.append((title, report))
+    if verbose or not report.ok():
+        print(f"== {title}")
+        print(report.render())
+    else:
+        n_warn = len(report.warnings())
+        tail = f" ({n_warn} warning(s))" if n_warn else ""
+        print(f"ok: {title}{tail}")
+
+
+def lint_example_graphs(results, *, fast: bool, verbose: bool) -> None:
+    from repro.graphs import jpeg, nbody, streamit
+    builders = [("jpeg", jpeg.build_stg),
+                ("streamit-fft", streamit.build_fft),
+                ("nbody", nbody.build_stg)]
+    if not fast:
+        builders += [("streamit-filterbank", streamit.build_filterbank),
+                     ("streamit-autocor", streamit.build_autocor)]
+    for name, build in builders:
+        stg = build()
+        for cb in (1, 2):
+            for pick, mk in (("fastest", Selection.fastest),
+                             ("smallest", Selection.smallest)):
+                rep = verify.verify_graph(stg, mk(stg), capacity_blocks=cb)
+                _lint(f"graph {name} [{pick}, cb={cb}]", rep, results,
+                      verbose)
+
+
+def lint_config_plans(results, *, fast: bool, verbose: bool) -> None:
+    from repro import configs
+    from repro.core import planner
+    from repro.graphs import lm_graph
+    from repro.runtime.pipeline import as_selection
+    cells = [("tiny", "decode", None)]
+    if not fast:
+        cells = [(a, s, why) for a, s, ok, why in configs.all_cells()
+                 if ok] + cells
+    for arch, shape_name, _ in cells:
+        if arch == "tiny":
+            from repro.configs.base import ShapeCfg
+            from repro.configs.tiny import CONFIG as cfg
+            shape = ShapeCfg("decode_smoke", 64, 16, "decode")
+        else:
+            cfg = configs.get_config(arch)
+            shape = configs.SHAPES[shape_name]
+        try:
+            stg, _info = lm_graph.build_stg(cfg, shape, max_tp=8)
+            plan = planner.plan(cfg, shape, chips=64, max_tp=8)
+        except (ValueError, KeyError) as e:
+            # an unplannable cell is the planner's business, not a plan
+            # verification failure — note it and move on
+            print(f"skip: plan {arch}/{shape_name} — {e}")
+            continue
+        rep = verify.verify_graph(stg, as_selection(plan))
+        _lint(f"plan {arch}/{shape_name}", rep, results, verbose)
+
+
+def lint_schedules(results, *, fast: bool, verbose: bool) -> None:
+    from repro.runtime.pipeline import schedule as S
+    shapes = [(2, 4), (4, 8)] if fast else [(2, 2), (2, 4), (4, 8),
+                                            (4, 16), (8, 8)]
+    for p, m in shapes:
+        for mk, name in ((S.fill_drain, "fill_drain"),
+                         (S.one_f_one_b, "1f1b")):
+            sched = mk(p, m)
+            M = sched.n_model_stages
+            for cb in (1, 2, 4):
+                rep = verify.VerificationReport(
+                    plan=f"{name}({p},{m}) cb={cb}")
+                verify.verify_schedule_credits(
+                    sched, [cb] * (M - 1),
+                    [cb] * (M - 1) if sched.trains else [], rep)
+                _lint(f"schedule {name}({p}x{m}) cb={cb}", rep, results,
+                      verbose)
+        for v in (2,) if fast else (2, 4):
+            if v > 1 and m >= p * v and (p * v) % p == 0:
+                sched = S.interleaved_1f1b(p, m, v)
+                M = sched.n_model_stages
+                rep = verify.VerificationReport(
+                    plan=f"interleaved({p},{m},v{v})")
+                verify.verify_schedule_credits(
+                    sched, [4] * (M - 1), [4] * (M - 1), rep)
+                _lint(f"schedule interleaved({p}x{m},v{v})", rep,
+                      results, verbose)
+
+
+def lint_decode_feedback(results, *, verbose: bool) -> None:
+    for n_groups in (1, 2, 4, 8):
+        fb = max(2, n_groups)      # the _ServeRun default sizing
+        edges = [verify.EdgeSpec("embed", "blocks", 4, label="act0"),
+                 verify.EdgeSpec("blocks", "head", 4, label="act1"),
+                 verify.EdgeSpec("head", "embed", fb, label="feedback",
+                                 gated=False)]
+        rep = verify.VerificationReport(
+            plan=f"decode feedback, {n_groups} group(s), capacity {fb}")
+        verify.check_channel_capacities(edges, rep)
+        verify.check_cycles(edges, n_groups, rep)
+        _lint(f"decode feedback x{n_groups}", rep, results, verbose)
+
+
+def lint_fusions(results, *, fast: bool, verbose: bool) -> None:
+    from repro.graphs import jpeg
+    stg = jpeg.build_stg()
+    sel = Selection.fastest(stg)
+    # only compute nodes combine (source/sink stay at the boundary)
+    names = [n for n in stg.topo_order()
+             if stg.nodes[n].kind == "compute"]
+    plans = restructure.enumerate_fusions(names, max_group=3)
+    if fast:
+        plans = plans[:8]
+    for groups in plans:
+        rep = verify.VerificationReport(
+            plan="jpeg fusion " + "+".join("|".join(g) for g in groups))
+        verify.verify_fusion(names, groups, report=rep)
+        verify.verify_graph_fusion(stg, sel, groups, rep)
+        label = "+".join("/".join(g) for g in groups)
+        _lint(f"fusion jpeg [{label}]", rep, results, verbose)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="small subset (the test-suite smoke)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every report, not just failures")
+    args = ap.parse_args(argv)
+
+    results: list = []
+    lint_example_graphs(results, fast=args.fast, verbose=args.verbose)
+    lint_config_plans(results, fast=args.fast, verbose=args.verbose)
+    lint_schedules(results, fast=args.fast, verbose=args.verbose)
+    lint_decode_feedback(results, verbose=args.verbose)
+    lint_fusions(results, fast=args.fast, verbose=args.verbose)
+
+    n_err = sum(len(r.errors()) for _, r in results)
+    n_warn = sum(len(r.warnings()) for _, r in results)
+    failed = [t for t, r in results if not r.ok()]
+    print(f"\nstg-lint: {len(results)} plan(s) linted — "
+          f"{n_err} error(s), {n_warn} warning(s)")
+    if failed:
+        print("failing plans:")
+        for t in failed:
+            print(f"  {t}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
