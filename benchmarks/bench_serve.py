@@ -39,6 +39,29 @@ overhead: best-of-N traced decode tokens/s must stay within 3% of
 best-of-N untraced, and the stall bottleneck must land in the analytic
 ranking's top tier.
 
+Roofline accounting: host memory bandwidth is *measured* once per run
+(`analysis.roofline.measure_host_bandwidth`), each pipeline stage's
+decode step gets a bytes-moved bound
+(`analysis.roofline.decode_stage_bytes`: params streamed once + live KV
+prefix read + slot written), and the rows report
+``per_stage_fraction_of_roofline`` — the bytes/bw floor over the
+fastest observed decode service time per stage (min over that stage's
+``op_trace`` decode spans).  1.0 means the step runs at the bandwidth
+bound; fractions above 1 are expected at smoke scale, where the
+working set sits in CPU caches above DRAM.  The lone embed stage
+reports but never gates (it moves ~KBs per step — dispatch-bound by
+construction).  ``--smoke`` gates every other stage at
+``ROOFLINE_GATE_FRACTION``.
+
+A fourth arm (backend ``pipelined-refdecode``) reruns the pipelined
+serve with ``impl="ref"`` — the historical op-by-op decode body the
+fused kernels replaced — asserting token parity (the kernel swap may
+not change a single sampled token) and recording its tokens/s next to
+the fused default's.  The kernel win itself is gated on the isolated
+single-device decode step (donated jit, interleaved min-time bursts,
+best-of-N with early exit): ``--smoke`` fails unless the fused step
+beats the ref step (``kernel_step_speedup > 1``).
+
 Chaos drill (``--inject 'decode:r1@tok64=crash'``): serves a deep decode
 window twice through one extra pipeline — fault-free, then with a
 `runtime.failures.ReplicaFaultPlan` killing the named (stage, replica)
@@ -60,6 +83,15 @@ import sys
 import time
 
 import numpy as np
+
+# --smoke floor for per-stage fraction_of_roofline (decode steps, every
+# stage but the lone embed).  Deliberately lenient: smoke-sized stages
+# are dispatch-dominated, so the gate catches "the kernel path fell off
+# a cliff" (an accidental ref fallback, a per-step recompile), not
+# "the step left the roofline's neighbourhood" — block stages and head
+# measure ~0.15-0.20 on the reference dev host (see the committed
+# baseline-smoke rows), an order of magnitude above this floor.
+ROOFLINE_GATE_FRACTION = 0.02
 
 
 def _check_trace(tracer, pipe) -> None:
@@ -86,6 +118,93 @@ def _percentiles(samples_s: list[float]) -> tuple[float, float]:
     arr = np.sort(np.asarray(samples_s))
     return (float(np.percentile(arr, 50)) * 1e3,
             float(np.percentile(arr, 95)) * 1e3)
+
+
+def _stage_rooflines(cfg, pipe, res, batch: int, bw: float) -> dict:
+    """Per-stage ``fraction_of_roofline`` for the decode step.
+
+    Bytes: `roofline.decode_stage_bytes` at the most conservative live
+    cache length any decode step saw (the smallest group's prompt
+    bucket — a guaranteed lower bound on what every step read), so the
+    fraction is a true lower bound on the achieved fraction.  Time: the
+    FASTEST observed decode service time per stage (min over its
+    ``op_trace`` decode spans — the steady-state step, free of warm-up
+    and scheduling hiccups, matching the conservative byte count)."""
+    from repro.analysis import roofline
+
+    best_s: dict[str, float] = {}
+    for stage, kind, _seq, _rep, t_d, t_done in res.op_trace:
+        if kind == "D" and t_done > t_d:
+            best_s[stage] = min(t_done - t_d,
+                                best_s.get(stage, float("inf")))
+    cache_len = min(g.bucket for g in res.groups)
+    out = {}
+    for desc in pipe.stage_descs:
+        if desc.name not in best_s:
+            continue
+        nbytes = roofline.decode_stage_bytes(
+            cfg, batch=batch, cache_len=cache_len, span=desc.span,
+            has_embed=desc.has_embed, has_head=desc.has_head)
+        out[desc.name] = roofline.fraction_of_roofline(
+            nbytes, best_s[desc.name], bw)
+    return out
+
+
+def _gated_stages(pipe, fractions: dict) -> dict:
+    """The stages the roofline gate applies to: everything but a lone
+    embed (a per-token row gather moves ~KBs — dispatch-bound by
+    construction, so its fraction is reported but never gated)."""
+    return {d.name: fractions[d.name] for d in pipe.stage_descs
+            if d.name in fractions and (d.span is not None or d.has_head)}
+
+
+def _kernel_step_ab(cfg, batch: int) -> dict:
+    """Isolated decode-step A/B: the historical op-by-op ``ref`` body vs
+    the fused decode-kernel path, timed as the donated single-device
+    step jit (`lm.decode_step`, cache donated — the serving hot path
+    with sampling and queue bookkeeping stripped away).
+
+    Interleaved min-time bursts: the min over a 40-step burst is the
+    stable statistic at smoke scale (tokens/s wanders +-10% on a shared
+    host while the burst-min moves well under 1%), rounds alternate
+    fused/ref so host drift hits both arms symmetrically, and the loop
+    exits early once fused is ahead (symmetric — every completed round
+    times both arms equally).  Decoding continues past the ring
+    capacity, so every timed step runs at the full live cache — steady
+    work."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm
+
+    bucket, cap = 24, 72
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(2, cfg.vocab, (batch, bucket)))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    arms = {}
+    for impl in ("ref", "fused"):
+        step = jax.jit(functools.partial(lm.decode_step, cfg, impl=impl),
+                       donate_argnums=(1,))
+        _, cache = lm.prefill(cfg, params, {"tokens": toks}, capacity=cap)
+        cur = toks[:, -1:]
+        logits, cache = step(params, cache, cur)        # compile + warm
+        jax.block_until_ready(logits)
+        arms[impl] = [step, cache, cur]
+    best = {"ref": float("inf"), "fused": float("inf")}
+    for rnd in range(5):
+        for impl in ("fused", "ref"):
+            step, cache, cur = arms[impl]
+            for _ in range(40):
+                t0 = time.perf_counter()
+                logits, cache = step(params, cache, cur)
+                jax.block_until_ready(logits)
+                best[impl] = min(best[impl], time.perf_counter() - t0)
+            arms[impl][1] = cache
+        if rnd >= 1 and best["fused"] < best["ref"]:
+            break
+    return best
 
 
 def _chaos_arm(cfg, stg, plan, reqs, group: int, inject: str,
@@ -158,9 +277,15 @@ def run(verbose: bool = True, json_path: str | None = None,
                                         stall_bottleneck)
     from repro.runtime.server import LMServer, Request
 
+    from repro.analysis import roofline
+
     shape = ShapeCfg("bench_serve", 64, 16, "decode")
     plan = planner.plan(tiny, shape, chips=8, max_tp=4)
     stg, _ = lm_graph.build_stg(tiny, shape, max_tp=4)
+
+    # one bandwidth measurement anchors every fraction_of_roofline below:
+    # same host, same run — the denominator the datasheet can't provide
+    bw = roofline.measure_host_bandwidth()
 
     rng = np.random.default_rng(0)
     n_req, max_new = (8, 12) if smoke else (16, 16)
@@ -186,6 +311,12 @@ def run(verbose: bool = True, json_path: str | None = None,
     # each recorded gap is one true step time and p50/p95 are honest
     # percentiles over steps, not a per-request mean smeared flat
     p50, p95 = _percentiles(s.decode_step_s)
+    # whole-model roofline: one decode step moves every layer's params +
+    # live cache + the head matrix; the conservative cache_len (shortest
+    # prompt) keeps the fraction a lower bound like the per-stage ones
+    single_bytes = roofline.decode_stage_bytes(
+        tiny, batch=group, cache_len=min(len(r.prompt) for r in reqs),
+        span=(0, tiny.n_periods), has_embed=True, has_head=True)
     rows.append({
         "workload": workload,
         "backend": "single-device",
@@ -197,6 +328,9 @@ def run(verbose: bool = True, json_path: str | None = None,
         "decode_tokens": s.decode_tokens,
         "decode_steps": len(s.decode_step_s),
         "wall_s": single_wall,
+        "host_bw_gbs": bw / 1e9,
+        "fraction_of_roofline": roofline.fraction_of_roofline(
+            single_bytes, min(s.decode_step_s), bw),
     })
 
     # -- pipelined ----------------------------------------------------------
@@ -231,6 +365,8 @@ def run(verbose: bool = True, json_path: str | None = None,
                            + traced_res.stage_wait_s.get(s, {}).get("reorder", 0.0))
                  for s in pipe.stage_names}
     measured_btl = stall_bottleneck(tracer)
+    stage_frac = _stage_rooflines(tiny, pipe, run_res, group, bw)
+    gated_frac = _gated_stages(pipe, stage_frac)
 
     trace_path = None
     if json_path:
@@ -239,6 +375,16 @@ def run(verbose: bool = True, json_path: str | None = None,
         tracer.save(trace_path)
 
     if smoke:
+        # roofline gate: every decode stage but the lone embed must sit
+        # above the stated fraction of its bytes/bw floor — a collapse
+        # here means the step stopped being the kernel path (accidental
+        # ref fallback, per-step recompile), not host noise
+        assert gated_frac and min(gated_frac.values()) >= \
+            ROOFLINE_GATE_FRACTION, \
+            (f"decode step fell below {ROOFLINE_GATE_FRACTION:.0%} of its "
+             f"memory-bandwidth roofline: "
+             f"{ {k: round(v, 4) for k, v in gated_frac.items()} } "
+             f"(host bw {bw / 1e9:.1f} GB/s)")
         # the stall ranking must finger the analytic ranking's top tier
         # (the tiny plan's block stages tie at the analytic top, so any
         # of them is a correct answer — embed/head would not be)
@@ -290,6 +436,10 @@ def run(verbose: bool = True, json_path: str | None = None,
         "wall_s": run_res.wall_s,
         "per_stage_host_us": {n: run_res.stage_host_us(n)
                               for n in pipe.stage_names},
+        "per_stage_fraction_of_roofline": stage_frac,
+        "fraction_of_roofline": (min(gated_frac.values())
+                                 if gated_frac else float("nan")),
+        "host_bw_gbs": bw / 1e9,
         "per_stage_stall_ms": stall_ms,
         "per_stage_starve_ms": starve_ms,
         "stall_bottleneck": measured_btl,
@@ -354,6 +504,8 @@ def run(verbose: bool = True, json_path: str | None = None,
              f"{plain_best:.1f} unfused tok/s")
         fused_rate, unfused_rate = fused_best, plain_best
     p50, p95 = _percentiles(fused_res.token_latencies_s())
+    fused_frac = _stage_rooflines(tiny, fpipe, fused_res, group, bw)
+    fused_gated = _gated_stages(fpipe, fused_frac)
     rows.append({
         "workload": workload,
         "backend": "pipelined-fused",
@@ -372,6 +524,9 @@ def run(verbose: bool = True, json_path: str | None = None,
                                if unfused_rate else float("nan")),
         "per_stage_host_us": {n: fused_res.stage_host_us(n)
                               for n in fpipe.stage_names},
+        "per_stage_fraction_of_roofline": fused_frac,
+        "fraction_of_roofline": (min(fused_gated.values())
+                                 if fused_gated else float("nan")),
         "slo": fused_res.slo(),
         "compile_stats": fpipe.compile_stats.summary(),
         "planned_stage_replicas": {sp.name: sp.replicas
@@ -382,6 +537,43 @@ def run(verbose: bool = True, json_path: str | None = None,
     })
     for k, v in rows[-1]["slo"].items():
         rows[-1][k] = v
+
+    # -- ref-decode A/B: the decode-kernel swap, measured in one run --------
+    # same plan, same requests, impl="ref" — the historical op-by-op
+    # decode body the fused kernels replaced.  Token parity proves the
+    # kernel swap changed no sampled token; the rate sits next to the
+    # fused default's in the JSON so the serve-level delta is on record.
+    rpipe = DecodePipeline(tiny, stg, plan, impl="ref")
+    rpipe.serve([r.prompt for r in reqs], [r.max_new for r in reqs],
+                group_size=group)          # steady-state parity with above
+    rdec_res = rpipe.serve([r.prompt for r in reqs],
+                           [r.max_new for r in reqs], group_size=group)
+    assert rpipe.compile_stats.late == 0, \
+        f"compiles landed inside the ref serve: {rpipe.compile_stats.summary()}"
+    for c, toks in zip(ref_out, rdec_res.tokens):
+        assert c.tokens == toks, "ref-impl pipeline diverged from reference"
+    # the kernel win itself, gated where it is measurable: the isolated
+    # donated decode step (serve-level rates at smoke scale are dispatch
+    # noise; the step-level burst-min is stable to well under 1%)
+    step_best = _kernel_step_ab(tiny, group)
+    if smoke:
+        assert step_best["fused"] < step_best["ref"], \
+            (f"fused decode step did not beat the ref body: "
+             f"{step_best['fused'] * 1e3:.3f} ms fused vs "
+             f"{step_best['ref'] * 1e3:.3f} ms ref")
+    rows.append({
+        "workload": workload,
+        "backend": "pipelined-refdecode",
+        "decode_tok_per_s": rdec_res.decode_tokens_per_s(),
+        "decode_tokens": rdec_res.decode_tokens,
+        "wall_s": rdec_res.wall_s,
+        "decode_step_ms_ref": step_best["ref"] * 1e3,
+        "decode_step_ms_fused": step_best["fused"] * 1e3,
+        "kernel_step_speedup": step_best["ref"] / step_best["fused"],
+        "note": "impl='ref' rerun of the pipelined arm (token parity "
+                "asserted); decode_step_ms_* is the isolated donated "
+                "single-device step, interleaved burst-min best-of-N",
+    })
 
     # -- chaos drill --------------------------------------------------------
     if inject:
@@ -401,10 +593,20 @@ def run(verbose: bool = True, json_path: str | None = None,
                 line += (f"token p50 {r['p50_token_ms']:6.1f} ms "
                          f"p95 {r['p95_token_ms']:6.1f} ms | ")
             print(line + f"wall {r['wall_s']:.2f}s")
-        if rows[-1].get("stall_bottleneck"):
-            print(f"stall bottleneck: {rows[-1]['stall_bottleneck']} | "
-                  f"ttft p95 {rows[-1]['ttft_p95_ms']:.1f} ms | "
-                  f"token gap p99 {rows[-1]['token_gap_p99_ms']:.1f} ms")
+        for r in rows:
+            if r.get("stall_bottleneck"):
+                print(f"stall bottleneck: {r['stall_bottleneck']} | "
+                      f"ttft p95 {r['ttft_p95_ms']:.1f} ms | "
+                      f"token gap p99 {r['token_gap_p99_ms']:.1f} ms")
+            if r.get("per_stage_fraction_of_roofline"):
+                print(f"roofline ({r['backend']}, host bw "
+                      f"{bw / 1e9:.1f} GB/s): "
+                      + "  ".join(f"{k} {v:.3f}" for k, v in
+                                  r["per_stage_fraction_of_roofline"].items()))
+            if "kernel_step_speedup" in r:
+                print(f"decode step: ref {r['decode_step_ms_ref']:.3f} ms, "
+                      f"fused {r['decode_step_ms_fused']:.3f} ms "
+                      f"(x{r['kernel_step_speedup']:.3f})")
         print(json.dumps(rows, indent=2))
     if json_path:
         with open(json_path, "w") as f:

@@ -1,0 +1,151 @@
+"""Decode-attention Pallas TPU kernel: one token against a resident cache.
+
+A decode step attends one query row per (batch, head) against the whole
+ring-buffered KV cache — a masked softmax-weighted *gather*, so the step
+is memory-bound by construction: the only real work is streaming the
+cache past the accumulators once.  The kernel therefore
+
+  * never materialises the GQA head repeat (`ref.decode_attention_ref`
+    pays a rep-fold copy of BOTH caches per token): q is reshaped to
+    (B, KV, rep, hd) — group g owns query heads [g*rep, (g+1)*rep) —
+    and the caches transpose to (B, KV, C, hd), so each grid cell
+    (b, g, j) contracts a (rep, hd) query tile against one (block_k, hd)
+    cache block;
+  * keeps the KV-block axis as the innermost *sequential* grid dimension
+    with the online-softmax accumulators (acc, m, l) persisting in VMEM
+    scratch across it (`flash_attention`'s idiom, degenerate q block);
+  * takes ``cache_len`` as a *traced* scalar in scalar-prefetch SMEM
+    (`PrefetchScalarGridSpec`): it masks ``idx < cache_len`` (plus the
+    optional sliding window) and skips blocks entirely past the live
+    prefix with `pl.when`, so a short cache in a long buffer costs only
+    the blocks it occupies.
+
+Ring wraparound needs no index arithmetic here: `blocks.attn_decode`
+writes slot ``pos % C`` and passes ``cache_len = min(pos + 1, C)`` —
+once the buffer wraps every slot is live and the mask is all-true, and
+softmax attention is permutation-invariant over the key axis, so slot
+*order* is irrelevant.  `ref.decode_attention_chunked` is the same
+blocking in plain jnp (the CPU hot path); `ref.decode_attention_ref`
+is the gold oracle.
+
+Layouts: q (B, H, hd); k_cache, v_cache (B, C, KV, hd); out (B, H, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, window: int | None, block_k: int,
+                   num_k_blocks: int, rep_pad: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    clen = len_ref[0]
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (rep_pad, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (block_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        idx = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (rep_pad, block_k), 1)
+        mask = idx < clen
+        if window is not None:
+            mask &= idx >= clen - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    # block-level sparsity on the TRACED length: blocks entirely past the
+    # live prefix (or entirely before the window) contribute nothing.
+    # Block 0 is always alive without a window (cache_len >= 1 in decode).
+    alive = k_start < clen
+    if window is not None:
+        alive &= k_start + block_k - 1 >= clen - window
+    pl.when(alive)(_compute)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: int | None = None, scale: float | None = None,
+                     block_k: int = 128, interpret: bool = False):
+    """q: (B, H, hd) + cache (B, C, KV, hd) + cache_len () -> (B, H, hd).
+
+    ``cache_len`` is a traced scalar (number of valid slots); per-batch
+    lengths are a `ref.decode_attention_chunked` capability only.
+    """
+    b, h, d = q.shape
+    _, c, kv, _ = k_cache.shape
+    assert h % kv == 0, f"{h} query heads not a multiple of {kv} kv heads"
+    rep = h // kv
+    scale = scale if scale is not None else d ** -0.5
+
+    rep_pad = max(8, rep)              # f32 min sublane tile is 8 rows
+    qr = q.reshape(b, kv, rep, d)
+    if rep_pad > rep:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, rep_pad - rep), (0, 0)))
+    kt = k_cache.transpose(0, 2, 1, 3)     # (B, KV, C, hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    block_k = min(block_k, c)
+    nk = -(-c // block_k)
+    pad_k = nk * block_k - c
+    if pad_k:                          # padded slots mask as idx >= cache_len
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    clen = jnp.asarray(cache_len, jnp.int32).reshape((1,))
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, block_k=block_k,
+        num_k_blocks=nk, rep_pad=rep_pad)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep_pad, d),
+                         lambda b, g, j, _len: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, g, j, _len: (b, g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, g, j, _len: (b, g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep_pad, d),
+                               lambda b, g, j, _len: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep_pad, d), jnp.float32),   # acc
+            pltpu.VMEM((rep_pad,), jnp.float32),     # running max m
+            pltpu.VMEM((rep_pad,), jnp.float32),     # running sum l
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep_pad, d), q.dtype),
+        interpret=interpret,
+    )(clen, qr, kt, vt)
+    return out[:, :, :rep].reshape(b, h, d)

@@ -1,33 +1,50 @@
-"""Kernel dispatch: pallas (TPU) / interpret (tests) / ref (CPU dry-run).
+"""Kernel dispatch: pallas (TPU) / interpret (tests) / fused / ref.
 
-Model code calls these wrappers; the active implementation is selected by
-``set_default_impl`` or per-call.  On the CPU dry-run the ``ref`` paths are
-used — `ref.mha_chunked` / `ref.ssd_chunked` share the kernels' blocking
-structure so the lowered HLO shows the same memory behaviour.
+Model code calls these wrappers; the active implementation is selected
+per-call, by ``set_default_impl``, by the ``REPRO_KERNEL_IMPL`` env var
+(benches/CI force an impl without code edits), or automatically —
+``"pallas"`` on TPU, ``"fused"`` elsewhere.
+
+The tiers:
+
+  * ``"pallas"`` — real Pallas TPU kernels.
+  * ``"interpret"`` — the same kernels under the Pallas interpreter
+    (CPU-testable, same blocking).
+  * ``"fused"`` — the fast portable path: prefill/training wrappers
+    (`attention`/`ssd`/`rmsnorm`) behave exactly like ``"ref"``, but the
+    *decode* entry points use the fused step / GQA-no-repeat chunked
+    attention (`kernels.fused_decode`, `ref.decode_attention_chunked`).
+  * ``"ref"`` — the bitwise-historical oracle everywhere, including the
+    op-by-op `blocks.attn_decode` body.  Serving parity tests pin this.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
 from . import ref
+from .decode_attention import decode_attention as _decode_attn_pallas
 from .flash_attention import flash_attention as _flash_pallas
+from .fused_decode import attn_decode_step as _attn_decode_step
 from .rmsnorm import rmsnorm as _rmsnorm_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
-_DEFAULT_IMPL: str | None = None  # None => auto
+_IMPLS = ("pallas", "interpret", "fused", "ref")
+_DEFAULT_IMPL: str | None = None  # None => env var, then auto
 
 
 def set_default_impl(impl: str | None) -> None:
-    """impl in {None, 'pallas', 'interpret', 'ref'}."""
+    """impl in {None, 'pallas', 'interpret', 'fused', 'ref'}."""
     global _DEFAULT_IMPL
     _DEFAULT_IMPL = impl
 
 
 def resolve_impl(impl: str | None = None) -> str:
-    impl = impl or _DEFAULT_IMPL
-    if impl in ("pallas", "interpret", "ref"):
+    impl = impl or _DEFAULT_IMPL or os.environ.get("REPRO_KERNEL_IMPL")
+    if impl in _IMPLS:
         return impl
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return "pallas" if jax.default_backend() == "tpu" else "fused"
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
@@ -35,7 +52,7 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
               impl: str | None = None, block_q: int = 128, block_k: int = 128):
     """Multi-head (GQA) attention. q: (B,Sq,H,D), k/v: (B,Sk,KV,D)."""
     mode = resolve_impl(impl)
-    if mode == "ref":
+    if mode in ("ref", "fused"):
         return ref.mha_chunked(q, k, v, causal=causal, window=window,
                                scale=scale, kv_offset=kv_offset,
                                block_k=block_k)
@@ -47,7 +64,7 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
 def ssd(x, dt, a, b, c, *, chunk: int = 128, impl: str | None = None):
     """Mamba2 SSD scan. Returns (y, final_state)."""
     mode = resolve_impl(impl)
-    if mode == "ref":
+    if mode in ("ref", "fused"):
         return ref.ssd_chunked(x, dt, a, b, c, chunk=chunk)
     return _ssd_pallas(x, dt, a, b, c, chunk=chunk,
                        interpret=(mode == "interpret"))
@@ -55,6 +72,50 @@ def ssd(x, dt, a, b, c, *, chunk: int = 128, impl: str | None = None):
 
 def rmsnorm(x, w, *, eps: float = 1e-5, impl: str | None = None):
     mode = resolve_impl(impl)
-    if mode == "ref":
+    if mode in ("ref", "fused"):
         return ref.rmsnorm_reference(x, w, eps=eps)
     return _rmsnorm_pallas(x, w, eps=eps, interpret=(mode == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: int | None = None, scale: float | None = None,
+                     impl: str | None = None, block_k: int = 128):
+    """Single-token decode attention over a resident (ring) cache.
+
+    q: (B, H, hd); caches: (B, C, KV, hd); cache_len: () or (B,) valid
+    slots.  ``"ref"`` is the historical oracle (`decode_attention_ref`);
+    ``"fused"`` the GQA-no-repeat chunked path; ``"pallas"``/
+    ``"interpret"`` the `kernels.decode_attention` Pallas kernel
+    (scalar ``cache_len`` only — per-batch lengths fall back to the
+    chunked path).
+    """
+    mode = resolve_impl(impl)
+    if mode == "ref":
+        return ref.decode_attention_ref(q, k_cache, v_cache, cache_len,
+                                        window=window, scale=scale)
+    if mode == "fused" or getattr(cache_len, "ndim", 0):
+        return ref.decode_attention_chunked(q, k_cache, v_cache, cache_len,
+                                            window=window, scale=scale,
+                                            block_k=block_k)
+    return _decode_attn_pallas(q, k_cache, v_cache, cache_len, window=window,
+                               scale=scale, block_k=block_k,
+                               interpret=(mode == "interpret"))
+
+
+def attn_decode_step(x, k_cache, v_cache, pos, *, norm, wq, wk, wv, wo,
+                     bq=None, bk=None, bv=None, n_heads: int,
+                     head_dim: int, eps: float = 1e-5,
+                     rope_theta: float = 10_000.0, impl: str | None = None,
+                     block_k: int = 128):
+    """Fused one-token attention sublayer step (see `kernels.fused_decode`).
+
+    Returns (out (B,1,D), k_cache, v_cache) with the ring slot freshly
+    written and cache avals unchanged leaf-for-leaf (donation contract).
+    ``"ref"`` does not route here — `blocks.attn_decode` keeps the
+    historical op-by-op body for that impl.
+    """
+    mode = resolve_impl(impl)
+    return _attn_decode_step(
+        x, k_cache, v_cache, pos, norm=norm, wq=wq, wk=wk, wv=wv, wo=wo,
+        bq=bq, bk=bk, bv=bv, n_heads=n_heads, head_dim=head_dim, eps=eps,
+        rope_theta=rope_theta, mode=mode, block_k=block_k)

@@ -142,6 +142,76 @@ def decode_attention_ref(q, k_cache, v_cache, cache_len, *,
     return out.astype(q.dtype)
 
 
+def decode_attention_chunked(q, k_cache, v_cache, cache_len, *,
+                             window: int | None = None,
+                             scale: float | None = None, block_k: int = 128):
+    """Decode attention with the TPU kernel's blocking, in plain jnp.
+
+    Same shapes/semantics as `decode_attention_ref`, but GQA-aware with
+    no head repeat — q reshapes to (B, KV, rep, hd) and the cache streams
+    through an online softmax in ``block_k`` chunks, touching each cache
+    element exactly once instead of rep-folding both caches per token.
+    This is the models' hot decode path on backends without Pallas (the
+    ``"fused"`` impl); allclose (not bitwise) to the oracle.  Accepts a
+    scalar or per-batch ``cache_len`` ((B,) or the oracle's (B, 1)).
+    """
+    b, h, d = q.shape
+    _, c, kv, _ = k_cache.shape
+    rep = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    clen = jnp.asarray(cache_len)
+    if clen.ndim:
+        clen = clen.reshape(b)
+    qr = q.astype(jnp.float32).reshape(b, kv, rep, d) * scale
+
+    block_k = min(block_k, c)
+    nk = -(-c // block_k)
+    pad = nk * block_k - c
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if pad:                           # padded slots land past cache_len
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kf.reshape(b, nk, block_k, kv, d).transpose(1, 0, 3, 2, 4)
+    vb = vf.reshape(b, nk, block_k, kv, d).transpose(1, 0, 3, 2, 4)
+    starts = jnp.arange(nk, dtype=jnp.int32) * block_k
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kblk, vblk, k0 = blk                       # (B, KV, bk, d) x2, ()
+        s = jnp.einsum("bgrd,bgkd->bgrk", qr, kblk)
+        idx = k0 + jnp.arange(block_k)
+        if clen.ndim:                              # per-batch lengths
+            mask = idx[None, :] < clen[:, None]
+            if window is not None:
+                mask &= idx[None, :] >= clen[:, None] - window
+            mask = mask[:, None, None, :]
+        else:
+            mask = idx < clen
+            if window is not None:
+                mask &= idx >= clen - window
+            mask = mask[None, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bgrk,bgkd->bgrd", p, vblk)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kv, rep, d), jnp.float32)
+    m0 = jnp.full((b, kv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, rep), jnp.float32)
+    if nk == 1:        # decode caches usually fit one block — skip the scan
+        (acc, m, l), _ = step((acc0, m0, l0), (kb[0], vb[0], starts[0]))
+    else:
+        (acc, m, l), _ = jax.lax.scan(
+            step, (acc0, m0, l0), (kb, vb, starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # Mamba2 SSD (state-space duality) — arXiv:2405.21060
 # --------------------------------------------------------------------------

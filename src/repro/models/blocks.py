@@ -112,9 +112,25 @@ def init_attn_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
 
 def attn_decode(p, cfg: ModelConfig, x, cache, pos, *, impl=None):
     """One-token self-attention.  x: (B, 1, D); cache {k,v}: (B, C, KV, hd);
-    pos: () int32 absolute position.  Ring-buffered for SWA."""
+    pos: () int32 absolute position.  Ring-buffered for SWA.
+
+    Every impl except ``"ref"`` routes through the fused step
+    (`kernels.ops.attn_decode_step`: rmsnorm + QKV + rope + cache write +
+    decode attention + output proj in one call); ``"ref"`` keeps the
+    historical op-by-op body verbatim — the bitwise oracle the serving
+    parity tests pin.  Both return caches with the input avals
+    leaf-for-leaf (the `lm.decode_cache_structs` donation contract)."""
     a = cfg.attn
     B = x.shape[0]
+    mode = ops.resolve_impl(impl)
+    if mode != "ref":
+        o, k_cache, v_cache = ops.attn_decode_step(
+            x, cache["k"], cache["v"], pos,
+            norm=p["norm"], wq=p["wq"], wk=p["wk"], wv=p["wv"], wo=p["wo"],
+            bq=p.get("bq"), bk=p.get("bk"), bv=p.get("bv"),
+            n_heads=a.n_heads, head_dim=a.head_dim, eps=cfg.norm_eps,
+            rope_theta=a.rope_theta, impl=mode)
+        return sc.act(o, "dp", "sp", None), {"k": k_cache, "v": v_cache}
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, h, jnp.full((1,), pos))
     C = cache["k"].shape[1]
@@ -139,7 +155,9 @@ def cross_attn_decode(p, cfg: ModelConfig, x, enc_kv, *, impl=None):
         q = q + p["bq"].astype(x.dtype)
     q = q.reshape(B, a.n_heads, a.head_dim)
     k, v = enc_kv
-    o = ref.decode_attention_ref(q, k, v, k.shape[1])
+    # impl-dispatched like every other attention site (`set_default_impl`
+    # / REPRO_KERNEL_IMPL govern this one too); "ref" is the old call
+    o = ops.decode_attention(q, k, v, k.shape[1], impl=impl)
     return x + o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
 
 

@@ -328,6 +328,13 @@ def decode_blocks(cfg: ModelConfig, stacked_params, stacked_cache, x, pos, *,
     The whole-model `decode_step` is embed -> this -> norm/head; a
     pipeline block stage runs it over its resident cache slice.
 
+    ``impl`` threads straight to `kernels.ops` dispatch: every impl
+    except ``"ref"`` runs attention blocks through the fused decode step
+    (`kernels.fused_decode.attn_decode_step` — one rmsnorm+QKV+rope+
+    attention+residual call per block instead of the op-by-op chain);
+    ``"ref"`` keeps the historical body, the bitwise oracle for parity
+    tests.  None resolves via `REPRO_KERNEL_IMPL` / platform default.
+
     **Donation-safe cache signature**: the returned cache pytree matches
     ``stacked_cache`` leaf for leaf — same structure, shapes, and dtypes
     (cache writes `.astype` back to the stored dtype; the SSM state stays

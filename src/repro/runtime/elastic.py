@@ -144,5 +144,6 @@ def rescale_serving(pipe, cfg: ModelConfig, shape: ShapeCfg,
                            if periods_per_stage is None else periods_per_stage),
         seed=pipe.seed, params=pipe._init_params, overlap=pipe.overlap,
         replica_queue=pipe.replica_queue, workers=pipe.workers,
-        temperature=pipe.temperature, fusion_plan=pipe.fusion_plan)
+        temperature=pipe.temperature, fusion_plan=pipe.fusion_plan,
+        impl=pipe.impl)
     return ServingRescale(pipe=new_pipe, plan=new_plan, diff=diff)

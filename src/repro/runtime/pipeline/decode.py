@@ -73,16 +73,16 @@ def _embed_prefill_fn(cfg: ModelConfig):
     return fn
 
 
-def _block_prefill_fn(cfg: ModelConfig):
+def _block_prefill_fn(cfg: ModelConfig, impl: str | None = None):
     def fn(p, x, cap):
         S = x.shape[1]
-        return lm.prefill_blocks(cfg, p, x, jnp.arange(S), cap=cap)
+        return lm.prefill_blocks(cfg, p, x, jnp.arange(S), cap=cap, impl=impl)
     return fn
 
 
-def _block_decode_fn(cfg: ModelConfig):
+def _block_decode_fn(cfg: ModelConfig, impl: str | None = None):
     def fn(p, cache, x, pos):
-        return lm.decode_blocks(cfg, p, cache, x, pos)
+        return lm.decode_blocks(cfg, p, cache, x, pos, impl=impl)
     return fn
 
 
@@ -104,7 +104,8 @@ def _head_fn(cfg: ModelConfig):
 # deleted fifo hop did — so XLA cannot fuse across it and re-round the
 # bf16 activations: token parity with the unfused pipeline is structural,
 # not coincidental.
-def _fused_prefill_fn(cfg: ModelConfig, has_embed: bool, has_head: bool):
+def _fused_prefill_fn(cfg: ModelConfig, has_embed: bool, has_head: bool,
+                      impl: str | None = None):
     dt = dtype_of(cfg.compute_dtype)
 
     def fn(p, x, cap):
@@ -113,7 +114,7 @@ def _fused_prefill_fn(cfg: ModelConfig, has_embed: bool, has_head: bool):
             x = jax.lax.optimization_barrier(x)
         S = x.shape[1]
         y, cache = lm.prefill_blocks(cfg, p["layers"], x, jnp.arange(S),
-                                     cap=cap)
+                                     cap=cap, impl=impl)
         if has_head:
             h = jax.lax.optimization_barrier(y)[:, -1:]
             h = rmsnorm(h, p["norm"], cfg.norm_eps)
@@ -122,14 +123,16 @@ def _fused_prefill_fn(cfg: ModelConfig, has_embed: bool, has_head: bool):
     return fn
 
 
-def _fused_decode_fn(cfg: ModelConfig, has_embed: bool, has_head: bool):
+def _fused_decode_fn(cfg: ModelConfig, has_embed: bool, has_head: bool,
+                     impl: str | None = None):
     dt = dtype_of(cfg.compute_dtype)
 
     def fn(p, cache, x, pos):
         if has_embed:
             x = jnp.take(p["embed"], x, axis=0).astype(dt)
             x = jax.lax.optimization_barrier(x)
-        y, cache = lm.decode_blocks(cfg, p["layers"], cache, x, pos)
+        y, cache = lm.decode_blocks(cfg, p["layers"], cache, x, pos,
+                                    impl=impl)
         if has_head:
             h = jax.lax.optimization_barrier(y)[:, -1:]
             h = rmsnorm(h, p["norm"], cfg.norm_eps)
@@ -661,7 +664,7 @@ class DecodePipeline:
                  overlap: bool = True, replica_queue: int = 2,
                  workers: int | None = None, params=None,
                  temperature: float = 0.0, warmup: bool = True,
-                 fusion_plan=None):
+                 fusion_plan=None, impl: str | None = None):
         from . import as_selection
         sel = as_selection(sel)
         if cfg.encdec or cfg.frontend:
@@ -676,6 +679,9 @@ class DecodePipeline:
         self.replica_queue = max(1, replica_queue)
         self.workers = workers
         self.temperature = temperature
+        self.impl = impl               # kernel tier for every stage program
+        #                                (kernels.ops.resolve_impl; None =
+        #                                auto, "ref" = historical A/B path)
         devices = list(devices if devices is not None else jax.devices())
         self._keys = {}
         self._base_key = jax.random.PRNGKey(seed ^ 0xC0FFEE)
@@ -799,11 +805,11 @@ class DecodePipeline:
         self._warmed: set = set()
         self._embed = AotProgram(_embed_prefill_fn(cfg), name="embed",
                                  stats=self.compile_stats)
-        self._block_prefill = AotProgram(_block_prefill_fn(cfg),
+        self._block_prefill = AotProgram(_block_prefill_fn(cfg, impl),
                                          name="block.prefill",
                                          stats=self.compile_stats,
                                          static_argnums=(2,))
-        self._block_decode = AotProgram(_block_decode_fn(cfg),
+        self._block_decode = AotProgram(_block_decode_fn(cfg, impl),
                                         name="block.decode",
                                         stats=self.compile_stats,
                                         donate_argnums=(1,))
@@ -821,10 +827,10 @@ class DecodePipeline:
             tag = "+".join((["embed"] if key[0] else [])
                            + ["blocks"] + (["head"] if key[1] else []))
             self._fused[key] = (
-                AotProgram(_fused_prefill_fn(cfg, *key),
+                AotProgram(_fused_prefill_fn(cfg, *key, impl),
                            name=f"fused.{tag}.prefill",
                            stats=self.compile_stats, static_argnums=(2,)),
-                AotProgram(_fused_decode_fn(cfg, *key),
+                AotProgram(_fused_decode_fn(cfg, *key, impl),
                            name=f"fused.{tag}.decode",
                            stats=self.compile_stats, donate_argnums=(1,)))
 

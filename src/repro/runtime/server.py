@@ -96,7 +96,7 @@ class LMServer:
                  eos_id: int = 1, params=None, seed: int = 0,
                  mesh=None, temperature: float = 0.0, pipeline=None,
                  tracer=None, injector=None, health=None,
-                 preflight: bool = True):
+                 preflight: bool = True, impl: str | None = None):
         """``pipeline``: a `runtime.pipeline.DecodePipeline` — when set,
         ``serve``/``serve_round`` stream request groups through it instead
         of the single-device prefill/decode loop.  Build it with the same
@@ -106,7 +106,10 @@ class LMServer:
         serve — chaos drills and self-healing, pipelined backend only.
         ``preflight``: statically verify each pipelined serve's plan
         (`core.verify`) before launch; False skips the check (the
-        single-device backend has no plan to verify either way)."""
+        single-device backend has no plan to verify either way).
+        ``impl``: kernel implementation for every model call
+        (`kernels.ops.resolve_impl` tier — None = auto; ``"ref"`` pins
+        the bitwise-historical decode path for A/B runs)."""
         self.cfg = cfg
         self.max_batch = max_batch
         self.eos_id = eos_id
@@ -118,14 +121,20 @@ class LMServer:
         #                              backend only; None = tracing off)
         self.injector = injector     # optional ReplicaFaultPlan (chaos)
         self.health = health         # optional HealthController
-        self.model = build_model(cfg)
+        self.impl = impl
+        self.model = build_model(cfg, impl)
         self.params = params if params is not None \
             else self.model.init(jax.random.PRNGKey(seed))
         self.stats = ServeStats()
         self._prefill = jax.jit(
             lambda p, batch, cap: self.model.prefill(p, batch, capacity=cap),
             static_argnums=(2,))
-        self._decode = jax.jit(self.model.decode_step)
+        # the cache is donated: `decode_step` returns it with identical
+        # avals leaf-for-leaf (`decode_cache_structs` contract), so the
+        # steady-state decode loop updates the ring buffers in place —
+        # zero new cache allocations per token.  The loop below rebinds
+        # `cache` every step and never touches the donated value again.
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._key = jax.random.PRNGKey(seed ^ 0xC0FFEE)
 
     # -- one round ----------------------------------------------------------

@@ -4,9 +4,12 @@ Compares every ``BENCH_*.json`` in ``--new`` against the file of the same
 name in ``--baseline``, matching rows by (workload, backend/path) and
 diffing three metric families:
 
-  * **tokens/s** (``decode_tok_per_s``, ``prefill_tok_per_s``,
-    ``measured_tokens_per_s``) — higher is better; a regression beyond
-    ``--tolerance`` (default 20%) **fails** the run (exit 1);
+  * **tokens/s and roofline fraction** (``decode_tok_per_s``,
+    ``prefill_tok_per_s``, ``measured_tokens_per_s``,
+    ``fraction_of_roofline`` — the decode step's achieved fraction of
+    the measured memory-bandwidth bound) — higher is better; a
+    regression beyond ``--tolerance`` (default 20%) **fails** the run
+    (exit 1);
   * **measured bubble** (``bubble_1f1b``, ``bubble_interleaved``) —
     lower is better; beyond-tolerance regressions warn (``--strict``
     escalates warnings to failures);
@@ -50,6 +53,11 @@ RATE_METRICS = {                      # regressions FAIL
     "decode_tok_per_s": "up",
     "prefill_tok_per_s": "up",
     "measured_tokens_per_s": "up",
+    # achieved fraction of the measured memory-bandwidth bound for the
+    # decode step (bench_serve roofline accounting) — bandwidth is
+    # re-measured every run on the same host, so the ratio is
+    # host-normalised and gates as hard as tokens/s
+    "fraction_of_roofline": "up",
 }
 SOFT_METRICS = {                      # regressions WARN (fail with --strict)
     "bubble_1f1b": "down",
@@ -75,10 +83,23 @@ SOFT_METRICS = {                      # regressions WARN (fail with --strict)
     # the fusion win itself, tracked so a shrinking speedup warns even
     # while absolute tokens/s stays inside tolerance
     "speedup_vs_unfused": "up",
+    # decode-kernel step A/B (bench_serve backend "pipelined-refdecode"):
+    # fused step time over ref step time — the kernel win, tracked like
+    # the fusion win above
+    "kernel_step_speedup": "up",
 }
-DICT_METRICS = ("per_stage_us", "per_stage_host_us",   # down, soft
-                "per_stage_stall_ms", "per_stage_starve_ms",
-                "per_stage_stall_cycles", "per_stage_starve_cycles")
+# per-stage dict metric -> direction; all soft (per-stage values are the
+# noisiest surface — the scalar roofline/rate metrics above carry the
+# hard gates)
+DICT_METRICS = {
+    "per_stage_us": "down",
+    "per_stage_host_us": "down",
+    "per_stage_stall_ms": "down",
+    "per_stage_starve_ms": "down",
+    "per_stage_stall_cycles": "down",
+    "per_stage_starve_cycles": "down",
+    "per_stage_fraction_of_roofline": "up",
+}
 # dict metrics whose SUM is also diffed as a first-class warn metric
 # (``metric[sum]``): total host dispatch per token is the quantity stage
 # fusion optimises, and creep spread over many stages can hide inside
@@ -151,11 +172,11 @@ def compare_dirs(baseline_dir: str, new_dir: str, tolerance: float,
                 if metric in nrow and metric in brow:
                     check(name, key, metric, direction,
                           brow[metric], nrow[metric], hard=False)
-            for metric in DICT_METRICS:
+            for metric, direction in DICT_METRICS.items():
                 bd, nd = brow.get(metric), nrow.get(metric)
                 if isinstance(bd, dict) and isinstance(nd, dict):
                     for stage in sorted(set(bd) & set(nd)):
-                        check(name, key, f"{metric}[{stage}]", "down",
+                        check(name, key, f"{metric}[{stage}]", direction,
                               bd[stage], nd[stage], hard=False)
                     if metric in SUM_METRICS:
                         bs = [v for v in bd.values() if _finite(v)]
